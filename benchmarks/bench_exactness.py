@@ -1,0 +1,33 @@
+"""Paper D3 (exact replication): max |Δ| between Hydra-pipelined and
+sequential per-trial training — losses and final parameters (subprocess,
+8 fake devices)."""
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run() -> list[dict]:
+    rows = []
+    for arch in ("chatglm3-6b", "falcon-mamba-7b"):
+        proc = subprocess.run(
+            [sys.executable, "tests/integration/pipeline_exactness.py", arch],
+            env={**os.environ, "PYTHONPATH": os.path.join(ROOT, "src"),
+                 "XLA_FLAGS": "--xla_force_host_platform_device_count=8"},
+            capture_output=True, text=True, timeout=580, cwd=ROOT)
+        m = re.search(r"loss_err=([\d.e+-]+) param_err=([\d.e+-]+)",
+                      proc.stdout)
+        if proc.returncode != 0 or not m:
+            rows.append({"name": f"exactness/{arch}", "us_per_call": -1,
+                         "derived": {"stderr": proc.stderr[-300:]}})
+            continue
+        rows.append({
+            "name": f"exactness/{arch}",
+            "us_per_call": float(m.group(1)),
+            "derived": {"loss_err": float(m.group(1)),
+                        "param_err_after_3_steps": float(m.group(2)),
+                        "paper_desideratum": "exact replication (D3)"},
+        })
+    return rows

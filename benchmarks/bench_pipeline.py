@@ -1,0 +1,97 @@
+"""Paper D2 (throughput): measured wall-time of Hydra shard-parallel
+multi-model training vs sequential per-model training on the SAME device
+budget — small LM on 8 fake host devices (subprocess; CPU timings are noisy
+but the ratio is the signal)."""
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_CHILD = r"""
+import os, json, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from repro.configs import ASSIGNED_ARCHS
+from repro.core import pipeline as pl
+from repro.core.partitioner import plan_stages
+from repro.data.pipeline import TrainBatches
+from repro.launch.mesh import make_test_mesh
+from repro.models import lm
+from repro.models.layers import ModelOptions
+from repro.optim.adamw import AdamW
+
+cfg = ASSIGNED_ARCHS["chatglm3-6b"].reduced()
+opts = ModelOptions(remat=True)
+K, M, MB, SEQ, STEPS = 4, 4, 2, 32, 6
+eng = pl.EngineConfig(n_trials=K, n_microbatches=M, microbatch=MB,
+                      n_stages=8, data_size=1)
+mesh = make_test_mesh(1, 8)
+plan = plan_stages(cfg, eng.n_stages)
+params = pl.init_trial_params(cfg, eng, plan, jax.random.PRNGKey(0))
+optimizer = AdamW()
+hp = {"lr": jnp.full((K,), 1e-3), "wd": jnp.zeros((K,))}
+data = TrainBatches(cfg, eng, SEQ, seed=0)
+batches = [jax.tree.map(jnp.asarray, data.batch_for_step(s))
+           for s in range(STEPS)]
+data.close()
+
+# snapshot the single-trial baseline params BEFORE the Hydra step donates
+params1 = jax.tree.map(lambda x: jnp.array(x[:1]), params)
+
+# --- Hydra: K models pipelined over 8 stages -------------------------------
+step_fn = pl.make_train_step(cfg, opts, eng, mesh, optimizer)
+p, o = params, optimizer.init(params)
+p, o, _ = step_fn(p, o, batches[0], hp, jnp.int32(0))  # compile
+jax.block_until_ready(jax.tree.leaves(p)[0])
+t0 = time.monotonic()
+for s in range(1, STEPS):
+    p, o, _ = step_fn(p, o, batches[s], hp, jnp.int32(s))
+jax.block_until_ready(jax.tree.leaves(p)[0])
+hydra_s = (time.monotonic() - t0) / (STEPS - 1)
+
+# --- baseline: the same K models trained one-at-a-time, model-parallel over
+# the same 8 stages (traditional MP: what the paper says people do today) ---
+eng1 = pl.EngineConfig(n_trials=1, n_microbatches=M, microbatch=MB,
+                       n_stages=8, data_size=1)
+step1 = pl.make_train_step(cfg, opts, eng1, mesh, optimizer)
+hp1 = {"lr": jnp.full((1,), 1e-3), "wd": jnp.zeros((1,))}
+b1 = {k: v[:1] for k, v in batches[0].items()}
+p1, o1 = params1, optimizer.init(params1)
+p1, o1, _ = step1(p1, o1, b1, hp1, jnp.int32(0))  # compile
+jax.block_until_ready(jax.tree.leaves(p1)[0])
+t0 = time.monotonic()
+for s in range(1, STEPS):
+    for k in range(K):  # K sequential model-parallel jobs
+        bk = {kk: v[k:k+1] for kk, v in batches[s].items()}
+        p1, o1, _ = step1(p1, o1, bk, hp1, jnp.int32(s))
+jax.block_until_ready(jax.tree.leaves(p1)[0])
+seq_s = (time.monotonic() - t0) / (STEPS - 1)
+
+# each sequential job pays its own fill/drain bubble; Hydra pays one
+S = 8
+theoretical = K * (M + S - 1) / (K * M + S - 1)
+print(json.dumps({"hydra_step_s": hydra_s, "sequential_mp_step_s": seq_s,
+                  "speedup": seq_s / hydra_s, "theoretical": theoretical}))
+"""
+
+
+def run() -> list[dict]:
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD],
+        env={**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")},
+        capture_output=True, text=True, timeout=580, cwd=ROOT)
+    if proc.returncode != 0:
+        return [{"name": "pipeline_throughput/error", "us_per_call": -1,
+                 "derived": {"stderr": proc.stderr[-500:]}}]
+    d = json.loads(proc.stdout.strip().splitlines()[-1])
+    return [{
+        "name": "pipeline_throughput/hydra_vs_sequential_mp",
+        "us_per_call": round(d["hydra_step_s"] * 1e6, 1),
+        "derived": {
+            "sequential_mp_us": round(d["sequential_mp_step_s"] * 1e6, 1),
+            "measured_speedup": round(d["speedup"], 3),
+            "theoretical_speedup": round(d["theoretical"], 3),
+        },
+    }]

@@ -1,0 +1,26 @@
+"""Paper Fig. 2: shard vs model vs task parallelism — makespan/utilization
+from the discrete-event simulator (K models × S shard-devices)."""
+from repro.core import simulator as sim
+
+
+def run() -> list[dict]:
+    rows = []
+    for n_shards in (4, 8, 16):
+        for r in sim.figure2_table(n_shards=n_shards,
+                                   n_models_list=(1, 2, 4, 8, 16)):
+            rows.append({
+                "name": f"fig2/util/S{n_shards}/K{r['n_models']}",
+                "us_per_call": r["shard_makespan"],
+                "derived": {
+                    "shard_util": round(r["shard_util"], 4),
+                    "model_util": round(r["model_util"], 4),
+                    "gpipe_util": round(r["gpipe_util"], 4),
+                    "task_util": round(r["task_util"], 4),
+                    "speedup_vs_model_parallel":
+                        round(r["speedup_vs_model_parallel"], 3),
+                    "speedup_vs_gpipe": round(r["speedup_vs_gpipe"], 3),
+                    "speedup_vs_task_parallel":
+                        round(r["speedup_vs_task_parallel"], 3),
+                },
+            })
+    return rows

@@ -1,0 +1,60 @@
+"""§Roofline emitter: reads the dry-run JSON cells and prints the three-term
+roofline table (single-pod 16x16 mesh per spec)."""
+import glob
+import json
+import os
+
+from repro.analysis.roofline import format_table
+
+RESULTS = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
+
+
+def load_rows(mesh: str = "16x16", variant: str = "baseline"):
+    rows, skips = [], []
+    for path in sorted(glob.glob(os.path.join(RESULTS, mesh, variant,
+                                              "*.json"))):
+        d = json.load(open(path))
+        if "skipped" in d:
+            skips.append(d)
+            continue
+        r = d["roofline"]
+        r["n_trials"] = int(d["engine"]["n_trials"])
+        r["fits"] = d.get("fits_16GB_modeled", d.get("fits_16GB"))
+        rows.append(r)
+    return rows, skips
+
+
+def run() -> list[dict]:
+    rows, skips = load_rows()
+    out = []
+    for r in rows:
+        out.append({
+            "name": f"roofline/{r['arch']}/{r['shape']}",
+            "us_per_call": round(max(r["compute_s"], r["memory_s"],
+                                     r["collective_s"]) * 1e6, 1),
+            "derived": {
+                "compute_s": round(r["compute_s"], 4),
+                "memory_s": round(r["memory_s"], 4),
+                "collective_s": round(r["collective_s"], 4),
+                "dominant": r["dominant"],
+                "useful_ratio": round(r["useful_ratio"], 4),
+                "roofline_fraction": round(r["roofline_fraction"], 4),
+            },
+        })
+    for s in skips:
+        out.append({"name": f"roofline/{s['arch']}/{s['shape']}",
+                    "us_per_call": 0,
+                    "derived": {"skipped": s["skipped"][:80]}})
+    return out
+
+
+def print_pretty(mesh="16x16", variant="baseline"):
+    rows, skips = load_rows(mesh, variant)
+    print(format_table(rows))
+    for s in skips:
+        print(f"{s['arch']:26s} {s['shape']:12s} SKIP: {s['skipped'][:70]}")
+
+
+if __name__ == "__main__":
+    import sys
+    print_pretty(*(sys.argv[1:] or []))

@@ -1,0 +1,41 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV:
+  fig2/*        paper Figure 2 (simulator: shard vs model vs task parallel)
+  bert_memory/* paper §4.2 (per-device memory reduction, BERT-Large, 4-way)
+  pipeline_throughput/* paper D2 (measured Hydra vs sequential MP wall time)
+  exactness/*   paper D3 (pipelined == sequential training)
+  roofline/*    §Roofline terms per (arch × shape) from the dry-run artifacts
+"""
+import json
+import sys
+
+
+def main() -> None:
+    sections = []
+    from benchmarks import (bench_exactness, bench_memory, bench_pipeline,
+                            bench_utilization, roofline_table)
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    all_benches = {
+        "utilization": bench_utilization.run,
+        "memory": bench_memory.run,
+        "pipeline": bench_pipeline.run,
+        "exactness": bench_exactness.run,
+        "roofline": roofline_table.run,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in all_benches.items():
+        if only and only != name:
+            continue
+        try:
+            rows = fn()
+        except Exception as e:  # report, keep harness running
+            rows = [{"name": f"{name}/harness_error", "us_per_call": -1,
+                     "derived": {"error": repr(e)[:200]}}]
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']},"
+                  f"\"{json.dumps(r['derived'])}\"")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Batched serving through the shard-parallel pipeline: prefill a batch of
+requests, then greedy-decode tokens step by step (the decode_32k cell's code
+path at toy scale).
+
+    PYTHONPATH=src python examples/serve_decode.py
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/serve_decode.py --n-model 4 --n-data 2
+"""
+import argparse
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    # thin veneer over the production serving driver (same code path)
+    argv = sys.argv[1:]
+    defaults = ["--arch", "musicgen-medium", "--smoke", "--batch", "4",
+                "--prompt-len", "12", "--gen-len", "6"]
+    for flag in ("--arch", "--batch", "--prompt-len", "--gen-len"):
+        if flag in argv:
+            defaults = [d for i, d in enumerate(defaults)
+                        if not (d == flag or (i > 0 and defaults[i - 1] == flag))]
+    sys.argv = [sys.argv[0]] + defaults + argv
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

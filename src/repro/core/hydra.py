@@ -1,0 +1,145 @@
+"""Hydra orchestrator: search space → gangs → shard-parallel training →
+model selection. The end-to-end system of the paper (Fig. 3) with Cerebro's
+role played by ``core.trials``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import pipeline as pl
+from repro.core.partitioner import plan_stages
+from repro.core.scheduler import GangPlan, TrialSpec, plan_gangs
+from repro.core.trials import TrialResult
+from repro.data.pipeline import TrainBatches
+from repro.models.layers import ModelOptions
+from repro.optim.adamw import AdamW
+from repro.runtime.fault_tolerance import LoopConfig, run_with_restarts
+
+
+@dataclasses.dataclass
+class HydraConfig:
+    seq_len: int
+    steps: int
+    eval_every: int = 0  # 0 = only at end
+    checkpoint_every: int = 50
+    ckpt_dir: Optional[str] = None
+    seed: int = 0
+    param_dtype: jnp.dtype = jnp.float32
+
+
+class HydraRunner:
+    """Runs one gang (same-arch trials) as a single shard-parallel program."""
+
+    def __init__(self, cfg: ArchConfig, opts: ModelOptions, mesh,
+                 hydra_cfg: HydraConfig, optimizer: Optional[AdamW] = None):
+        self.cfg, self.opts, self.mesh = cfg, opts, mesh
+        self.hc = hydra_cfg
+        self.optimizer = optimizer or AdamW(grad_clip=1.0)
+
+    def _build(self, gang: GangPlan):
+        eng = gang.engine
+        plan = plan_stages(self.cfg, eng.n_stages)
+        key = jax.random.PRNGKey(self.hc.seed)
+        max_pos = self.hc.seq_len if self.cfg.rope == "learned" else 0
+        params = pl.init_trial_params(self.cfg, eng, plan, key,
+                                      dtype=self.hc.param_dtype,
+                                      max_pos=max_pos)
+        opt_state = self.optimizer.init(params)
+        hparams = {
+            "lr": jnp.asarray([t.lr for t in gang.trials], jnp.float32),
+            "wd": jnp.asarray([t.weight_decay for t in gang.trials],
+                              jnp.float32),
+        }
+        step_fn = pl.make_train_step(self.cfg, self.opts, eng, self.mesh,
+                                     self.optimizer)
+        return params, opt_state, hparams, step_fn
+
+    def run_gang(self, gang: GangPlan, n_steps: Optional[int] = None
+                 ) -> list[TrialResult]:
+        eng = gang.engine
+        n_steps = n_steps or self.hc.steps
+        params, opt_state, hparams, step_fn = self._build(gang)
+        data = TrainBatches(self.cfg, eng, self.hc.seq_len,
+                            seed=self.hc.seed)
+        losses = np.zeros((eng.n_trials,), np.float64)
+
+        def one_step(state, step):
+            p, o = state
+            batch = data.batch_for_step(step)
+            p, o, metrics = step_fn(p, o, batch, hparams,
+                                    jnp.asarray(step, jnp.int32))
+            return (p, o), metrics
+
+        report = run_with_restarts(
+            one_step, (params, opt_state),
+            LoopConfig(n_steps=n_steps,
+                       checkpoint_every=self.hc.checkpoint_every,
+                       ckpt_dir=self.hc.ckpt_dir))
+        data.close()
+        params, opt_state = report.final_state
+        if report.step_metrics:
+            losses = np.asarray(report.step_metrics[-1]["loss"])
+        # held-out evaluation: a fresh deterministic batch beyond train steps
+        val = self.evaluate(gang, params, hparams, step=10_000_000)
+        return [TrialResult(spec=t, steps=n_steps,
+                            train_loss=float(losses[i]),
+                            val_loss=float(val[i]))
+                for i, t in enumerate(gang.trials)]
+
+    def evaluate(self, gang: GangPlan, params, hparams, step: int):
+        """Per-trial validation loss on a held-out deterministic batch."""
+        eng = gang.engine
+        data = TrainBatches(self.cfg, eng, self.hc.seq_len,
+                            seed=self.hc.seed + 999)
+        batch = data.batch_for_step(step)
+        data.close()
+        pspecs = pl.param_pspecs(self.cfg, eng)
+        bspecs = pl.batch_pspecs(self.cfg, eng, train=True)
+        from jax.sharding import PartitionSpec as P
+
+        def inner(p, b):
+            loss_vec, _ = pl.pipeline_train_loss(self.cfg, self.opts, eng,
+                                                 p, b)
+            for ax in eng.dp_axes:
+                loss_vec = jax.lax.pmean(loss_vec, ax)
+            return loss_vec
+
+        fn = jax.jit(jax.shard_map(inner, mesh=self.mesh,
+                                   in_specs=(pspecs, bspecs),
+                                   out_specs=P(), check_vma=False))
+        return np.asarray(fn(params, batch))
+
+
+def run_model_selection(cfg: ArchConfig, opts: ModelOptions, mesh,
+                        hydra_cfg: HydraConfig, trials: Sequence[TrialSpec],
+                        base_eng: pl.EngineConfig,
+                        strategy=None) -> dict:
+    """Full Hydra workflow: plan gangs, train them shard-parallel, select.
+
+    Returns {"best": TrialResult, "all": [TrialResult...], "gangs": int}.
+    """
+    runner = HydraRunner(cfg, opts, mesh, hydra_cfg)
+    all_results: list[TrialResult] = []
+
+    def train_fn(specs, n_steps):
+        gangs = plan_gangs(specs, base_eng, {cfg.name: cfg},
+                           hydra_cfg.seq_len)
+        out = []
+        for g in gangs:
+            out.extend(runner.run_gang(g, n_steps))
+        all_results.extend(out)
+        return out
+
+    if strategy is None:
+        results = train_fn(list(trials), hydra_cfg.steps)
+        best = min(results, key=lambda r: r.val_loss)
+    else:
+        best = strategy.run(list(trials), train_fn)
+    return {"best": best, "all": all_results}

@@ -1,0 +1,864 @@
+"""Hydra's shard-parallel execution engine.
+
+The paper's core idea — run *shards of K independent models* concurrently so a
+device idled by one model's sequential dependency works on another model — is
+compiled here into a single SPMD program:
+
+  * the ``model`` mesh axis holds pipeline *stages* (= the paper's shards);
+  * the slot stream interleaves (trial k, microbatch m) pairs round-robin;
+  * one ``lax.scan`` over ticks advances every stage one slot per tick, with
+    activations hopping stage→stage via ``lax.ppermute`` over the ICI ring;
+  * embedding and LM head are **vocab-parallel over the stage axis** (tokens
+    are replicated across stages, so a masked-local-gather + psum is exact and
+    the head matmul is split S ways instead of idling S−1 stages);
+  * gradients come from ``jax.grad`` *through* the scanned pipeline — AD
+    reverses the ppermute schedule automatically, so each trial's gradient is
+    exactly the unpipelined gradient (paper desideratum D3).
+
+Per-trial optimizer updates (vmapped hyperparameters over the K axis) and the
+data/pod-axis gradient reductions also live inside the shard_map so every
+collective is explicit and visible to the roofline analyzer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core.partitioner import StagePlan, plan_stages
+from repro.models import blocks as BLK
+from repro.models import lm
+from repro.models.layers import ModelOptions
+
+
+# ---------------------------------------------------------------------------
+# Engine configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static configuration of one Hydra gang (same-architecture trials)."""
+
+    n_trials: int  # K — concurrent models (the paper's task-parallel level)
+    n_microbatches: int  # M — slots per trial per step
+    microbatch: int  # per-(data×pod)-replica microbatch size
+    n_stages: int  # size of the stage ("model") mesh axis
+    data_size: int = 1  # size of the data axis
+    pod_size: int = 1  # size of the pod axis (1 = single pod)
+    stage_axis: str = "model"
+    data_axis: str = "data"
+    pod_axis: Optional[str] = None
+    fsdp: bool = False  # ZeRO-style: shard layer weights over data axis
+    vocab_parallel: bool = True
+    batch_replicated: bool = False  # batch too small to shard (long_500k)
+    window: int = 0  # sliding window for attention (long-context serving)
+    max_seq: int = 0  # cache length for serving
+    cache_dtype: Any = jnp.bfloat16
+    # --- §Perf knobs (baseline: all off/default) ---------------------------
+    skip_bubbles: bool = False  # cond-skip fill/drain ticks (compute+gathers;
+    # safe: validity is uniform over every axis the inner collectives span)
+    prefill_chunks: int = 1  # >1: chunked prefill — sequence chunks become
+    # extra pipeline slots (Hydra's slot-filling applied within one request);
+    # chunk c attends to the cache written by chunks < c (mode="append")
+    layer_remat: bool = True  # inner per-layer checkpoint (False = tick-level
+    # remat only: one fewer weight-gather round in backward)
+
+    @property
+    def n_slots(self) -> int:
+        return self.n_trials * self.n_microbatches
+
+    @property
+    def n_ticks(self) -> int:
+        return self.n_slots + self.n_stages - 1
+
+    @property
+    def dp_axes(self):
+        """Axes carrying data parallelism (batch sharding + grad reduction)."""
+        if self.pod_axis is not None:
+            return (self.pod_axis, self.data_axis)
+        return (self.data_axis,)
+
+    @property
+    def bubble_fraction(self) -> float:
+        return (self.n_stages - 1) / self.n_ticks
+
+    @property
+    def cache_groups(self) -> int:
+        """Distinct caches in serving: chunked prefill shares one cache per
+        request group across its sequence-chunk slots."""
+        if self.prefill_chunks > 1:
+            return self.n_microbatches // self.prefill_chunks
+        return self.n_microbatches
+
+    def padded_vocab(self, vocab: int) -> int:
+        s = self.n_stages
+        return -(-vocab // s) * s
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout: trial-stacked, stage-sharded (+ optional FSDP)
+# ---------------------------------------------------------------------------
+
+
+def _fsdp_dim(path_leaf_shape, data_size: int) -> Optional[int]:
+    """Pick the dim (of the unstacked layer leaf) to shard over the data axis.
+
+    Prefer the first matrix dim divisible by the data-axis size; vectors stay
+    replicated.
+    """
+    if len(path_leaf_shape) < 2:
+        return None
+    for d, size in enumerate(path_leaf_shape):
+        if size % data_size == 0 and size >= data_size:
+            return d
+    return None
+
+
+def trial_params_struct(cfg: ArchConfig, eng: EngineConfig, plan: StagePlan,
+                        dtype=jnp.bfloat16, max_pos: int = 0):
+    """ShapeDtypeStructs of the trial-stacked parameter pytree (dry-run)."""
+    one = jax.eval_shape(
+        lambda k: lm.init_params(cfg, k, dtype=dtype, max_pos=max_pos,
+                                 n_layers=plan.padded_layers),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    vpad = eng.padded_vocab(cfg.vocab_size)
+
+    def fix(path, s):
+        shape = (eng.n_trials,) + s.shape
+        name = "/".join(str(p.key) if hasattr(p, "key") else str(p)
+                        for p in path)
+        if name == "embed/tok":
+            shape = (eng.n_trials, vpad, cfg.d_model)
+        if name == "head":
+            shape = (eng.n_trials, cfg.d_model, vpad)
+        return jax.ShapeDtypeStruct(shape, s.dtype)
+
+    return jax.tree_util.tree_map_with_path(fix, one)
+
+
+def init_trial_params(cfg: ArchConfig, eng: EngineConfig, plan: StagePlan,
+                      key, dtype=jnp.float32, max_pos: int = 0):
+    """Materialize K trials' parameters (stacked on a leading K axis)."""
+    keys = jax.random.split(key, eng.n_trials)
+    params = jax.vmap(
+        lambda k: lm.init_params(cfg, k, dtype=dtype, max_pos=max_pos,
+                                 n_layers=plan.padded_layers))(keys)
+    vpad = eng.padded_vocab(cfg.vocab_size)
+    if vpad != cfg.vocab_size:
+        pad = vpad - cfg.vocab_size
+        params["embed"]["tok"] = jnp.pad(
+            params["embed"]["tok"], ((0, 0), (0, pad), (0, 0)))
+        if "head" in params:
+            params["head"] = jnp.pad(params["head"], ((0, 0), (0, 0), (0, pad)))
+    return params
+
+
+def param_pspecs(cfg: ArchConfig, eng: EngineConfig):
+    """PartitionSpec pytree for the trial-stacked params.
+
+    layers/*   : (K, Lp, ...)   -> P(None, stage, [fsdp-dim over data])
+    embed/tok  : (K, Vp, D)     -> P(None, stage, None)  [vocab-parallel]
+    embed/pos  : (K, maxpos, D) -> P(None, stage, None)  [position-parallel]
+    head       : (K, D, Vp)     -> P(None, None, stage)
+    final_norm : replicated ; shared/* : replicated (grads psum'd over stage)
+    """
+    st, da = eng.stage_axis, eng.data_axis
+    plan = plan_stages(cfg, eng.n_stages)
+    struct = trial_params_struct(cfg, eng, plan)
+
+    def spec(path, leaf):
+        name = "/".join(str(p.key) if hasattr(p, "key") else str(p)
+                        for p in path)
+        if name.startswith("layers/"):
+            rest = [None] * (leaf.ndim - 2)
+            if eng.fsdp:
+                d = _fsdp_dim(leaf.shape[2:], eng.data_size)
+                if d is not None:
+                    rest[d] = da
+            return P(None, st, *rest)
+        if name == "embed/tok" or name == "embed/pos":
+            if eng.vocab_parallel:
+                return P(None, st, *([None] * (leaf.ndim - 2)))
+            return P(*([None] * leaf.ndim))
+        if name == "head":
+            if eng.vocab_parallel:
+                return P(None, None, st)
+            return P(*([None] * leaf.ndim))
+        return P(*([None] * leaf.ndim))  # final_norm, shared/*
+
+    return jax.tree_util.tree_map_with_path(spec, struct)
+
+
+# ---------------------------------------------------------------------------
+# Vocab-parallel embedding / loss / sampling (stage-axis collectives)
+# ---------------------------------------------------------------------------
+
+
+def _stage_info(eng: EngineConfig):
+    s_idx = lax.axis_index(eng.stage_axis)
+    return s_idx, eng.n_stages
+
+
+def vp_embed(cfg: ArchConfig, eng: EngineConfig, embed_local, tokens,
+             positions=None, compute_dtype=jnp.float32):
+    """Vocab-parallel embedding: masked local gather + psum over stages.
+
+    Tokens are replicated across the stage axis, so each stage gathers the
+    rows it owns and the psum reconstitutes the full embedding exactly.
+    """
+    s_idx, n_stages = _stage_info(eng)
+    tok_tab = embed_local["tok"]  # (V_pad/S, D)
+    v_s = tok_tab.shape[0]
+    local = tokens - s_idx * v_s
+    valid = (local >= 0) & (local < v_s)
+    rows = jnp.take(tok_tab, jnp.clip(local, 0, v_s - 1), axis=0)
+    part = jnp.where(valid[..., None], rows, 0).astype(compute_dtype)
+    if cfg.rope == "learned" and positions is not None and "pos" in embed_local:
+        pos_tab = embed_local["pos"]  # (maxpos/S, D)
+        p_s = pos_tab.shape[0]
+        plocal = positions - s_idx * p_s
+        pvalid = (plocal >= 0) & (plocal < p_s)
+        prows = jnp.take(pos_tab, jnp.clip(plocal, 0, p_s - 1), axis=0)
+        part = part + jnp.where(pvalid[..., None], prows, 0).astype(compute_dtype)
+    return lax.psum(part, eng.stage_axis)
+
+
+def plain_embed(cfg, eng, embed_local, tokens, positions=None,
+                compute_dtype=jnp.float32):
+    x = jnp.take(embed_local["tok"], tokens, axis=0).astype(compute_dtype)
+    if cfg.rope == "learned" and positions is not None and "pos" in embed_local:
+        tab = embed_local["pos"]
+        x = x + jnp.take(tab, jnp.minimum(positions, tab.shape[0] - 1),
+                         axis=0).astype(compute_dtype)
+    return x
+
+
+def vp_loss(cfg: ArchConfig, eng: EngineConfig, norm_p, head_local, y,
+            labels):
+    """Vocab-parallel cross-entropy (mean over tokens). y (b,s,D) replicated
+    across stages; head_local (D, V_pad/S)."""
+    s_idx, n_stages = _stage_info(eng)
+    x = lm.final_norm_apply(cfg, norm_p, y)
+    logits = jnp.einsum("bsd,dv->bsv", x, head_local).astype(jnp.float32)
+    v_s = logits.shape[-1]
+    gid = s_idx * v_s + jnp.arange(v_s)
+    logits = jnp.where(gid < cfg.vocab_size, logits, -1e30)
+    # the shift is a pure stabilizer — logsumexp is shift-invariant, so
+    # stop_gradient is exact (pmax has no AD rule; gather+max does)
+    lmax = jnp.max(
+        lax.all_gather(lax.stop_gradient(jnp.max(logits, axis=-1)),
+                       eng.stage_axis, axis=0), axis=0)
+    sumexp = lax.psum(jnp.sum(jnp.exp(logits - lmax[..., None]), axis=-1),
+                      eng.stage_axis)
+    local_label = labels - s_idx * v_s
+    owned = (local_label >= 0) & (local_label < v_s)
+    ll = jnp.take_along_axis(
+        logits, jnp.clip(local_label, 0, v_s - 1)[..., None], axis=-1)[..., 0]
+    ll = lax.psum(jnp.where(owned, ll, 0.0), eng.stage_axis)
+    nll = jnp.log(sumexp) + lmax - ll
+    return nll.mean()
+
+
+def vp_greedy_token(cfg: ArchConfig, eng: EngineConfig, norm_p, head_local,
+                    y):
+    """Vocab-parallel greedy sampling of the next token. y (b, 1, D)."""
+    s_idx, _ = _stage_info(eng)
+    x = lm.final_norm_apply(cfg, norm_p, y)
+    logits = jnp.einsum("bsd,dv->bsv", x, head_local).astype(jnp.float32)
+    v_s = logits.shape[-1]
+    gid = s_idx * v_s + jnp.arange(v_s)
+    logits = jnp.where(gid < cfg.vocab_size, logits, -1e30)
+    lmax = jnp.max(logits, axis=-1)  # (b, 1)
+    larg = jnp.argmax(logits, axis=-1) + s_idx * v_s
+    gmax = lax.pmax(lmax, eng.stage_axis)
+    winner = lax.psum(jnp.where(lmax >= gmax, larg, 0), eng.stage_axis)
+    count = lax.psum((lmax >= gmax).astype(jnp.int32), eng.stage_axis)
+    return (winner // jnp.maximum(count, 1))[:, 0], gmax[:, 0]  # (b,), (b,)
+
+
+def plain_loss(cfg, eng, norm_p, head_full, y, labels):
+    x = lm.final_norm_apply(cfg, norm_p, y)
+    logits = jnp.einsum("bsd,dv->bsv", x, head_full)
+    return lm.cross_entropy(logits, labels)
+
+
+# ---------------------------------------------------------------------------
+# FSDP per-layer gather hook
+# ---------------------------------------------------------------------------
+
+
+def make_layer_gather(cfg: ArchConfig, eng: EngineConfig):
+    """Returns fn applied to one layer's (local) params inside the stage scan:
+    all-gathers the data-axis-sharded dims back to full size. Its AD transpose
+    is a reduce-scatter, which IS the FSDP gradient reduction."""
+    if not eng.fsdp:
+        return None
+    specs = param_pspecs(cfg, eng)["layers"]
+
+    def gather(p_layer):
+        def one(spec, leaf):
+            # spec corresponds to (K, Lp, ...); leaf here is (...) per layer
+            dims = list(spec)[2:]
+            for d, ax in enumerate(dims):
+                if ax == eng.data_axis:
+                    out = lax.all_gather(leaf, eng.data_axis, axis=d,
+                                         tiled=True)
+                    # pin the gather to the param dtype: without the barrier
+                    # XLA commutes downstream fp32 converts across the gather
+                    # (2× ICI traffic and full-leaf fp32 temps — see the
+                    # buffer-dump analysis in EXPERIMENTS.md §Perf)
+                    return lax.optimization_barrier(out)
+            return leaf
+
+        return jax.tree.map(one, specs, p_layer,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    return gather
+
+
+# ---------------------------------------------------------------------------
+# The pipelined forward (shared by train loss and serving)
+# ---------------------------------------------------------------------------
+
+
+def _slot_ids(eng: EngineConfig, slot):
+    k = jnp.clip(slot % eng.n_trials, 0, eng.n_trials - 1)
+    m = jnp.clip(slot // eng.n_trials, 0, eng.n_microbatches - 1)
+    return k, m
+
+
+def _take2(tree, i, j):
+    """tree leaves (K, M, ...) -> (...) at [i, j] (dynamic)."""
+    return jax.tree.map(
+        lambda l: lax.dynamic_index_in_dim(
+            lax.dynamic_index_in_dim(l, i, 0, keepdims=False),
+            j, 0, keepdims=False), tree)
+
+
+def _take1(tree, i):
+    return jax.tree.map(
+        lambda l: lax.dynamic_index_in_dim(l, i, 0, keepdims=False), tree)
+
+
+def pipeline_train_loss(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
+                        params, batch):
+    """Runs the multi-trial pipelined forward; returns per-trial (loss, aux).
+
+    Executes *inside* shard_map. ``params`` leaves are local shards:
+    layers (K, L_s, ...), embed/tok (K, V_s, D), head (K, D, V_s), etc.
+    batch: tokens/labels (K, M, mb, seq) + optional extras.
+    """
+    S = eng.n_stages
+    K, M = eng.n_trials, eng.n_microbatches
+    plan = plan_stages(cfg, S)
+    l_s = plan.layers_per_stage
+    s_idx = lax.axis_index(eng.stage_axis)
+    layer_offset = s_idx * l_s
+    layer_mask = (layer_offset + jnp.arange(l_s)) < cfg.n_layers
+    gather_fn = make_layer_gather(cfg, eng)
+
+    tokens, labels = batch["tokens"], batch["labels"]
+    mb, seq = tokens.shape[-2], tokens.shape[-1]
+    d = cfg.d_model
+    cdt = opts.compute_dtype
+    pos_train = jnp.broadcast_to(jnp.arange(seq), (mb, seq))
+
+    def embed_slot(slot):
+        k, m = _slot_ids(eng, slot)
+        tok = _take2({"t": tokens}, k, m)["t"]
+        emb_k = _take1(params["embed"], k)
+        if eng.vocab_parallel:
+            x = vp_embed(cfg, eng, emb_k, tok, pos_train, cdt)
+        else:
+            x = plain_embed(cfg, eng, emb_k, tok, pos_train, cdt)
+        if "frontend_embeds" in batch:
+            fe = _take2({"f": batch["frontend_embeds"]}, k, m)["f"]
+            nf = fe.shape[1]
+            x = x.at[:, :nf].set(fe.astype(x.dtype))
+        return x
+
+    def slot_pos(slot):
+        if cfg.rope == "mrope":
+            k, m = _slot_ids(eng, slot)
+            return _take2({"p": batch["mrope_pos"]}, k, m)["p"]  # (3, mb, seq)
+        return pos_train
+
+    def tick_compute(x_cur, t):
+        """One tick's compute (embed + stage + head-loss). Rematerialized:
+        only the carried activation is stashed per tick, which bounds the
+        pipeline's activation memory at n_ticks × (mb, seq, d) — the
+        difference between fitting 16 GB HBM and not (see EXPERIMENTS §Perf).
+        The ppermute stays OUTSIDE so backward replays compute, not comms
+        beyond what AD itself requires.
+
+        skip_bubbles: fill/drain ticks take the cheap cond branch instead of
+        computing-then-masking. Safe in SPMD because each cond predicate is
+        uniform across every mesh axis its branch communicates over: the
+        stage-compute branch only gathers over 'data' (validity depends on
+        (t, stage) only); the embed/head branches psum over 'model' (validity
+        depends on t only)."""
+        # --- inject (stage 0's input for slot t) --------------------------
+        valid_in = t < eng.n_slots
+        if eng.skip_bubbles:
+            x_emb = lax.cond(valid_in, embed_slot,
+                             lambda _: jnp.zeros((mb, seq, d), cdt), t)
+        else:
+            x_emb = embed_slot(t)
+        x_in = jnp.where(s_idx == 0, x_emb, x_cur)
+        # --- stage compute -------------------------------------------------
+        slot_cur = t - s_idx
+        valid_cur = (slot_cur >= 0) & (slot_cur < eng.n_slots)
+        k_cur, _ = _slot_ids(eng, slot_cur)
+        x_in = jnp.where(valid_cur, x_in, 0.0).astype(cdt)
+
+        def run_stage(x_in):
+            p_layers = _take1(params["layers"], k_cur)
+            shared = (_take1(params["shared"], k_cur)
+                      if "shared" in params else None)
+            y, _, aux = lm.stack_apply(
+                cfg, opts, p_layers, x_in, pos=slot_pos(slot_cur),
+                mode="train", shared_params=shared, layer_mask=layer_mask,
+                layer_offset=layer_offset, window=0,
+                layer_param_fn=gather_fn, inner_remat=eng.layer_remat)
+            return y, aux
+
+        if eng.skip_bubbles:
+            y, aux = lax.cond(valid_cur, run_stage,
+                              lambda x: (x, jnp.zeros((), jnp.float32)),
+                              x_in)
+        else:
+            y, aux = run_stage(x_in)
+        aux_val = jnp.where(valid_cur, aux, 0.0)
+        # --- head / loss (slot finishing at the last stage) ---------------
+        slot_out = t - (S - 1)
+        valid_out = (slot_out >= 0) & (slot_out < eng.n_slots)
+        k_out, m_out = _slot_ids(eng, slot_out)
+
+        def run_head(y):
+            y_last = lax.psum(
+                jnp.where(s_idx == S - 1, y, 0.0), eng.stage_axis)
+            lbl = _take2({"l": labels}, k_out, m_out)["l"]
+            norm_k = _take1({"n": params["final_norm"]}, k_out)["n"]
+            head_k = _take1({"h": params["head"]}, k_out)["h"]
+            if eng.vocab_parallel:
+                return vp_loss(cfg, eng, norm_k, head_k, y_last, lbl)
+            return plain_loss(cfg, eng, norm_k, head_k, y_last, lbl)
+
+        if eng.skip_bubbles:
+            slot_loss = lax.cond(valid_out, run_head,
+                                 lambda _: jnp.zeros((), jnp.float32), y)
+        else:
+            slot_loss = run_head(y)
+        loss_val = jnp.where(valid_out, slot_loss, 0.0)
+        return y, loss_val, aux_val
+
+    remat_tick = jax.checkpoint(tick_compute) if opts.remat else tick_compute
+
+    def tick(carry, t):
+        x_cur, loss_acc, aux_acc = carry
+        y, loss_val, aux_val = remat_tick(x_cur, t)
+        slot_cur = t - s_idx
+        k_cur, _ = _slot_ids(eng, slot_cur)
+        k_out, _ = _slot_ids(eng, t - (S - 1))
+        aux_acc = aux_acc.at[k_cur].add(aux_val)
+        loss_acc = loss_acc.at[k_out].add(loss_val)
+        # --- advance the ring ---------------------------------------------
+        if S > 1:
+            perm = [(i, (i + 1) % S) for i in range(S)]
+            x_next = lax.ppermute(y, eng.stage_axis, perm)
+        else:
+            x_next = y
+        return (x_next, loss_acc, aux_acc), None
+
+    x0 = jnp.zeros((mb, seq, d), cdt)
+    (xf, loss_acc, aux_acc), _ = lax.scan(
+        tick, (x0, jnp.zeros((K,), jnp.float32), jnp.zeros((K,), jnp.float32)),
+        jnp.arange(eng.n_ticks))
+    # aux was accumulated per stage; total = sum over stages
+    aux_acc = lax.psum(aux_acc, eng.stage_axis)
+    return loss_acc / M, aux_acc / M
+
+
+# ---------------------------------------------------------------------------
+# Train step (grad + reductions + per-trial optimizer update)
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
+                    mesh, optimizer, jit: bool = True) -> Callable:
+    """Builds the jitted multi-trial pipelined train step.
+
+    Returns fn(params, opt_state, batch, hparams, step) ->
+    (params, opt_state, metrics). ``hparams`` is a dict of (K,) arrays
+    (per-trial learning rates etc. — Hydra's model-selection axis).
+    """
+    pspecs = param_pspecs(cfg, eng)
+    ospecs = optimizer.state_pspecs(pspecs)
+    bspecs = batch_pspecs(cfg, eng, train=True)
+
+    def inner(params, opt_state, batch, hparams, step):
+        # objective normalization: grads are psum'd over the data(+pod) axes,
+        # so divide the local objective by the DP degree — the CE term then
+        # equals the global-batch mean exactly; the MoE aux term is defined
+        # per data-shard microbatch (Switch-style) and averaged.
+        dp_degree = eng.data_size * eng.pod_size
+
+        def local_loss(p):
+            loss_vec, aux_vec = pipeline_train_loss(cfg, opts, eng, p, batch)
+            total = loss_vec.sum()
+            if cfg.moe is not None:
+                total = total + cfg.moe.load_balance_coef * aux_vec.sum()
+            return total / dp_degree, loss_vec
+
+        grads, loss_vec = jax.grad(local_loss, has_aux=True)(params)
+        grads, gnorm = reduce_grads(cfg, eng, grads)
+        params_new, opt_new = optimizer.update(params, grads, opt_state,
+                                               hparams, step, grad_norm=gnorm)
+        # per-trial loss averaged over the data(+pod) axes
+        for ax in eng.dp_axes:
+            loss_vec = lax.pmean(loss_vec, ax)
+        metrics = {"loss": loss_vec, "grad_norm": gnorm}
+        return params_new, opt_new, metrics
+
+    mapped = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(pspecs, ospecs, bspecs, P(), P()),
+        out_specs=(pspecs, ospecs, {"loss": P(), "grad_norm": P()}),
+        check_vma=False)
+    if not jit:
+        return mapped
+    return jax.jit(mapped, donate_argnums=(0, 1))
+
+
+def reduce_grads(cfg: ArchConfig, eng: EngineConfig, grads):
+    """Explicit gradient reductions + per-trial global grad norm.
+
+    Leaves sharded over an axis already carry a *summed* gradient for that
+    axis (the all_gather/psum transposes inside AD produce it); replicated
+    leaves need an explicit psum. The per-trial norm weights each leaf's
+    square-sum once regardless of replication.
+    """
+    pspecs = param_pspecs(cfg, eng)
+    k = eng.n_trials
+    # sq-sum accumulators keyed by which axes still shard the (reduced) grad
+    acc = {"both": jnp.zeros((k,), jnp.float32),
+           "stage": jnp.zeros((k,), jnp.float32),
+           "data": jnp.zeros((k,), jnp.float32),
+           "none": jnp.zeros((k,), jnp.float32)}
+
+    def one(g, spec):
+        axes_in_spec = [a for a in jax.tree.leaves(tuple(spec))
+                        if isinstance(a, str)]
+        out = g
+        if eng.data_axis not in axes_in_spec:
+            out = lax.psum(out, eng.data_axis)
+        if eng.stage_axis not in axes_in_spec:
+            out = lax.psum(out, eng.stage_axis)
+        if eng.pod_axis is not None:
+            out = lax.psum(out, eng.pod_axis)
+        sq = jnp.sum(jnp.square(out.astype(jnp.float32)),
+                     axis=tuple(range(1, out.ndim)))
+        s_sh = eng.stage_axis in axes_in_spec
+        d_sh = eng.data_axis in axes_in_spec
+        key = ("both" if s_sh and d_sh else "stage" if s_sh
+               else "data" if d_sh else "none")
+        acc[key] = acc[key] + sq
+        return out
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_s = treedef.flatten_up_to(pspecs)
+    out = [one(g, s) for g, s in zip(flat_g, flat_s)]
+    total = (lax.psum(acc["both"], (eng.stage_axis, eng.data_axis))
+             + lax.psum(acc["stage"], eng.stage_axis)
+             + lax.psum(acc["data"], eng.data_axis)
+             + acc["none"])
+    gnorm = jnp.sqrt(total)
+    return jax.tree.unflatten(treedef, out), gnorm
+
+
+# ---------------------------------------------------------------------------
+# Serving: pipelined prefill / decode (forward-only, KV/SSM cache threading)
+# ---------------------------------------------------------------------------
+
+
+def shared_slots_per_stage(cfg: ArchConfig, plan: StagePlan) -> int:
+    """Uniform (max) shared-attention site count per stage (SPMD padding)."""
+    if cfg.hybrid is None:
+        return 0
+    return max(lm.n_shared_sites(cfg, plan.layer_offset(s),
+                                 plan.layers_per_stage)
+               for s in range(plan.n_stages))
+
+
+def serve_cache_struct(cfg: ArchConfig, eng: EngineConfig,
+                       dry_run: bool = True):
+    """Global cache pytree (ShapeDtypeStructs) for the serving pipeline.
+
+    Layout: layer leaves (K, M, Lp, mb_global, ...) with Lp sharded over the
+    stage axis; shared-site leaves (K, M, S*slots, mb_global, ...).
+    """
+    plan = plan_stages(cfg, eng.n_stages)
+    mb_global = eng.microbatch * (1 if eng.batch_replicated
+                                  else eng.data_size * eng.pod_size)
+    one = BLK.layer_cache_shape(cfg, mb_global, eng.max_seq, eng.cache_dtype)
+    lead = (eng.n_trials, eng.cache_groups, plan.padded_layers)
+    layers = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(lead + s.shape, s.dtype), one)
+    shared = None
+    if cfg.hybrid is not None:
+        s_one = BLK.shared_cache_shape(cfg, mb_global, eng.max_seq,
+                                       eng.cache_dtype, eng.window)
+        n_slots = eng.n_stages * shared_slots_per_stage(cfg, plan)
+        shared = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                (eng.n_trials, eng.cache_groups, n_slots) + s.shape,
+                s.dtype), s_one)
+    tree = {"layers": layers, "shared": shared}
+    if dry_run:
+        return tree
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), tree)
+
+
+def serve_cache_pspecs(cfg: ArchConfig, eng: EngineConfig):
+    st = eng.stage_axis
+    batch_ax = None if eng.batch_replicated else eng.dp_axes
+    plan = plan_stages(cfg, eng.n_stages)
+    one = BLK.layer_cache_shape(cfg, 1, max(eng.max_seq, 1), eng.cache_dtype)
+    layers = jax.tree.map(
+        lambda s: P(None, None, st, batch_ax, *([None] * (len(s.shape) - 1))),
+        one)
+    shared = None
+    if cfg.hybrid is not None:
+        s_one = BLK.shared_cache_shape(cfg, 1, max(eng.max_seq, 1),
+                                       eng.cache_dtype, eng.window)
+        shared = jax.tree.map(
+            lambda s: P(None, None, st, batch_ax,
+                        *([None] * (len(s.shape) - 1))), s_one)
+    return {"layers": layers, "shared": shared}
+
+
+def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
+                   params, cache, batch, mode: str):
+    """Pipelined forward for serving; runs inside shard_map.
+
+    decode: batch = {tokens (K,M,mb,1), positions (K,M,mb)}; one new token per
+    sequence against the live cache.
+    prefill: batch = {tokens (K,M,mb,seq)} (+ frontend extras); fills the
+    cache and emits the first generated token.
+    Returns (new_cache, tokens_out (K,M,mb), logit_max (K,M,mb)).
+    """
+    S = eng.n_stages
+    K, M = eng.n_trials, eng.n_microbatches
+    plan = plan_stages(cfg, S)
+    l_s = plan.layers_per_stage
+    s_idx = lax.axis_index(eng.stage_axis)
+    layer_offset = s_idx * l_s
+    layer_mask = (layer_offset + jnp.arange(l_s)) < cfg.n_layers
+    gather_fn = make_layer_gather(cfg, eng)
+    n_sh = shared_slots_per_stage(cfg, plan)
+
+    tokens = batch["tokens"]
+    mb, qlen = tokens.shape[-2], tokens.shape[-1]
+    cdt = opts.compute_dtype
+    nc = eng.prefill_chunks if (mode == "prefill"
+                                and eng.prefill_chunks > 1) else 1
+    stack_mode = "append" if nc > 1 else mode
+
+    def chunk_of(m):
+        return m % nc if nc > 1 else jnp.zeros((), jnp.int32)
+
+    def embed_slot(slot):
+        k, m = _slot_ids(eng, slot)
+        tok = _take2({"t": tokens}, k, m)["t"]
+        if mode == "decode":
+            pos = _take2({"p": batch["positions"]}, k, m)["p"][:, None]
+        else:
+            pos = chunk_of(m) * qlen + jnp.broadcast_to(
+                jnp.arange(qlen), (mb, qlen))
+        emb_k = _take1(params["embed"], k)
+        if eng.vocab_parallel:
+            x = vp_embed(cfg, eng, emb_k, tok, pos, cdt)
+        else:
+            x = plain_embed(cfg, eng, emb_k, tok, pos, cdt)
+        if mode != "decode" and "frontend_embeds" in batch:
+            fe = _take2({"f": batch["frontend_embeds"]}, k, m)["f"]
+            x = x.at[:, :fe.shape[1]].set(fe.astype(x.dtype))
+        return x
+
+    def slot_pos(slot):
+        k, m = _slot_ids(eng, slot)
+        if mode == "decode":
+            p = _take2({"p": batch["positions"]}, k, m)["p"][:, None]  # (mb,1)
+            if cfg.rope == "mrope":
+                return jnp.broadcast_to(p, (3, mb, 1))
+            return p
+        if cfg.rope == "mrope":
+            return _take2({"p": batch["mrope_pos"]}, k, m)["p"]
+        return chunk_of(m) * qlen + jnp.broadcast_to(
+            jnp.arange(qlen), (mb, qlen))
+
+    def slot_cache(cache, k, m):
+        """Local (L_s, ...) cache slice of one slot (+ local shared sites).
+        Chunked prefill: the nc chunk-slots of a request group share one
+        cache (group = m // nc); chunk order through the pipeline guarantees
+        chunk c's write lands at each stage before chunk c+1 reads it."""
+        g = m // nc if nc > 1 else m
+        lay = _take2(cache["layers"], k, g)
+        sh = None
+        if cache["shared"] is not None:
+            sh = _take2(cache["shared"], k, g)
+        return {"layers": lay, "shared": sh}
+
+    def put_cache(cache, k, m, new_slice, valid):
+        m = m // nc if nc > 1 else m
+
+        def upd(buf, new):
+            old = lax.dynamic_index_in_dim(
+                lax.dynamic_index_in_dim(buf, k, 0, keepdims=False),
+                m, 0, keepdims=False)
+            val = jnp.where(valid, new.astype(buf.dtype), old)
+            return lax.dynamic_update_slice(
+                buf, val[None, None],
+                (k, m) + (0,) * (buf.ndim - 2))
+        out = {"layers": jax.tree.map(upd, cache["layers"],
+                                      new_slice["layers"])}
+        if cache["shared"] is not None:
+            out["shared"] = jax.tree.map(upd, cache["shared"],
+                                         new_slice["shared"])
+        else:
+            out["shared"] = None
+        return out
+
+    def tick(carry, t):
+        x_cur, cache, tok_out, val_out = carry
+        valid_in = t < eng.n_slots
+        if eng.skip_bubbles:
+            x_emb = lax.cond(
+                valid_in, embed_slot,
+                lambda _: jnp.zeros((mb, qlen, cfg.d_model), cdt), t)
+        else:
+            x_emb = embed_slot(t)
+        x_in = jnp.where(s_idx == 0, x_emb, x_cur)
+        slot_cur = t - s_idx
+        valid_cur = (slot_cur >= 0) & (slot_cur < eng.n_slots)
+        k_cur, m_cur = _slot_ids(eng, slot_cur)
+        x_in = jnp.where(valid_cur, x_in, 0.0).astype(cdt)
+
+        def run_stage(operand):
+            x_in, cache = operand
+            p_layers = _take1(params["layers"], k_cur)
+            shared = (_take1(params["shared"], k_cur)
+                      if "shared" in params else None)
+            kv_off = None
+            if mode == "decode":
+                kv_off = _take2({"p": batch["positions"]}, k_cur, m_cur)["p"]
+            elif nc > 1:
+                kv_off = jnp.full((mb,), chunk_of(m_cur) * qlen, jnp.int32)
+            c_slice = slot_cache(cache, k_cur, m_cur)
+            y, c_new, _ = lm.stack_apply(
+                cfg, opts, p_layers, x_in, pos=slot_pos(slot_cur),
+                mode=stack_mode, cache=c_slice, shared_params=shared,
+                layer_mask=layer_mask, layer_offset=layer_offset,
+                kv_offset=kv_off, window=eng.window,
+                layer_param_fn=gather_fn)
+            return y, put_cache(cache, k_cur, m_cur, c_new, valid_cur)
+
+        if eng.skip_bubbles:
+            y, cache = lax.cond(valid_cur, run_stage,
+                                lambda op: (op[0], op[1]), (x_in, cache))
+        else:
+            y, cache = run_stage((x_in, cache))
+        # head: greedy next token for the slot draining at the last stage
+        slot_out = t - (S - 1)
+        valid_out = (slot_out >= 0) & (slot_out < eng.n_slots)
+        k_out, m_out = _slot_ids(eng, slot_out)
+        y_last = lax.psum(jnp.where(s_idx == S - 1, y[:, -1:], 0.0),
+                          eng.stage_axis)
+        norm_k = _take1({"n": params["final_norm"]}, k_out)["n"]
+        head_k = _take1({"h": params["head"]}, k_out)["h"]
+        if eng.vocab_parallel:
+            nxt, lmax = vp_greedy_token(cfg, eng, norm_k, head_k, y_last)
+        else:
+            x_h = lm.final_norm_apply(cfg, norm_k, y_last)
+            logits = jnp.einsum("bsd,dv->bsv", x_h, head_k)[:, 0]
+            nxt, lmax = jnp.argmax(logits, -1), jnp.max(logits, -1)
+        upd_tok = jnp.where(valid_out, nxt.astype(jnp.int32),
+                            lax.dynamic_index_in_dim(
+                                lax.dynamic_index_in_dim(
+                                    tok_out, k_out, 0, False), m_out, 0,
+                                False))
+        tok_out = lax.dynamic_update_slice(
+            tok_out, upd_tok[None, None], (k_out, m_out, 0))
+        upd_val = jnp.where(valid_out, lmax.astype(jnp.float32),
+                            lax.dynamic_index_in_dim(
+                                lax.dynamic_index_in_dim(
+                                    val_out, k_out, 0, False), m_out, 0,
+                                False))
+        val_out = lax.dynamic_update_slice(
+            val_out, upd_val[None, None], (k_out, m_out, 0))
+        if S > 1:
+            perm = [(i, (i + 1) % S) for i in range(S)]
+            x_next = lax.ppermute(y, eng.stage_axis, perm)
+        else:
+            x_next = y
+        return (x_next, cache, tok_out, val_out), None
+
+    x0 = jnp.zeros((mb, qlen, cfg.d_model), cdt)
+    tok0 = jnp.zeros((K, M, mb), jnp.int32)
+    val0 = jnp.zeros((K, M, mb), jnp.float32)
+    (xf, cache, tok_out, val_out), _ = lax.scan(
+        tick, (x0, cache, tok0, val0), jnp.arange(eng.n_ticks))
+    return cache, tok_out, val_out
+
+
+def make_serve_step(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
+                    mesh, mode: str, jit: bool = True) -> Callable:
+    """Builds the jitted pipelined serving step (``mode``: prefill|decode).
+
+    Returns fn(params, cache, batch) -> (new_cache, tokens, logit_max).
+    """
+    pspecs = param_pspecs(cfg, eng)
+    bspecs = batch_pspecs(cfg, eng, train=False)
+    if mode == "prefill":
+        bspecs.pop("positions", None)
+    else:  # decode consumes plain tokens; modality prefixes live in the cache
+        bspecs.pop("frontend_embeds", None)
+        bspecs.pop("mrope_pos", None)
+    cspecs = serve_cache_pspecs(cfg, eng)
+    batch_ax = P() if eng.batch_replicated else P(None, None, eng.dp_axes)
+
+    def inner(params, cache, batch):
+        return pipeline_serve(cfg, opts, eng, params, cache, batch, mode)
+
+    mapped = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(pspecs, cspecs, bspecs),
+        out_specs=(cspecs, batch_ax, batch_ax),
+        check_vma=False)
+    if not jit:
+        return mapped
+    return jax.jit(mapped, donate_argnums=(1,))
+
+
+def batch_pspecs(cfg: ArchConfig, eng: EngineConfig, train: bool):
+    """PartitionSpecs for the (K, M, batch, ...) slot-major batch arrays."""
+    dp = P(None, None, None if eng.batch_replicated else eng.dp_axes)
+    specs = {"tokens": dp}
+    if train:
+        specs["labels"] = dp
+    else:
+        specs["positions"] = dp
+    if cfg.frontend is not None:
+        specs["frontend_embeds"] = dp
+    if cfg.rope == "mrope":
+        # (K, M, 3, mb, seq): batch dim is 3rd
+        specs["mrope_pos"] = P(None, None, None,
+                               None if eng.batch_replicated else eng.dp_axes)
+    return specs

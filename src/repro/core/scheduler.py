@@ -1,0 +1,196 @@
+"""Hydra's shard-parallel task scheduler (the paper's "scheduler" box).
+
+On TPU the *within-gang* schedule is compiled (static round-robin — see
+pipeline.py); this module handles everything the compiler can't:
+
+  * **capacity planning** — how many concurrent trials K fit per chip given
+    the HBM budget (params + optimizer + pipeline activation stash + caches);
+  * **gang planning** — grouping a trial population (possibly heterogeneous
+    architectures) into same-architecture gangs of size ≤ K_max and choosing
+    microbatch counts so the pipeline bubble fraction meets a target;
+  * **failure / elasticity policy** — re-planning gangs around cordoned mesh
+    slices and shrunken data axes (used by runtime/elastic.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.partitioner import layer_flops_per_token, plan_stages
+from repro.core.pipeline import EngineConfig
+
+# TPU v5e (the deployment target; see EXPERIMENTS.md §Roofline)
+HBM_BYTES_PER_CHIP = 16 * 1024 ** 3
+HBM_BUDGET_FRACTION = 0.9  # leave headroom for XLA scratch
+
+
+@dataclasses.dataclass(frozen=True)
+class TrialSpec:
+    """One model-selection trial (the task-parallel unit of the paper)."""
+
+    arch: str
+    lr: float
+    weight_decay: float = 0.0
+    seed: int = 0
+    tag: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryEstimate:
+    params_bytes: int
+    opt_bytes: int
+    act_bytes: int
+    cache_bytes: int
+
+    @property
+    def total(self) -> int:
+        return self.params_bytes + self.opt_bytes + self.act_bytes \
+            + self.cache_bytes
+
+
+def per_chip_bytes(cfg: ArchConfig, eng: EngineConfig, seq_len: int,
+                   train: bool, param_bytes: int = 2,
+                   opt_bytes_per_param: int = 12) -> MemoryEstimate:
+    """Per-chip HBM model for ONE trial under the engine config.
+
+    Stage sharding divides layer params by n_stages; FSDP further divides by
+    data_size. The activation stash covers the in-flight pipeline slots
+    (n_ticks live stage-inputs with remat). Optimizer = fp32 m + v + master.
+    """
+    plan = plan_stages(cfg, eng.n_stages)
+    layer_p = cfg.layer_param_count() * plan.layers_per_stage
+    if eng.fsdp:
+        layer_p = math.ceil(layer_p / eng.data_size)
+    vocab_p = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    vocab_p = math.ceil(vocab_p / (eng.n_stages if eng.vocab_parallel else 1))
+    shared_p = cfg.shared_block_param_count()
+    n_params_local = layer_p + vocab_p + shared_p + cfg.d_model
+    params_b = n_params_local * param_bytes
+    opt_b = n_params_local * opt_bytes_per_param if train else 0
+    if train:
+        # pipeline stash: one stage-input per in-flight tick (remat policy).
+        # Empirically (XLA buffer dump, EXPERIMENTS §Perf) the backward also
+        # materializes an fp32 convert of the whole stash hoisted out of the
+        # loop, so budget bf16 + fp32 = 6 bytes per element.
+        act_b = eng.n_ticks * eng.microbatch * seq_len * cfg.d_model * 6
+        # transient working set: gathered layer weights (×2 for grad), attn
+        # carries, fp32 grad buffers of one layer
+        act_b += 3 * cfg.layer_param_count() * 4
+        act_b += 8 * eng.microbatch * min(seq_len, 4096) * cfg.d_model * 4
+        cache_b = 0
+    else:
+        act_b = 4 * eng.microbatch * min(seq_len, 4096) * cfg.d_model * 4
+        cache_b = _cache_bytes_per_chip(cfg, eng, seq_len)
+    return MemoryEstimate(params_b, opt_b, act_b, cache_b)
+
+
+def _cache_bytes_per_chip(cfg: ArchConfig, eng: EngineConfig,
+                          seq_len: int) -> int:
+    plan = plan_stages(cfg, eng.n_stages)
+    b_local = eng.microbatch * eng.n_microbatches
+    if cfg.family in ("ssm", "hybrid"):
+        s = cfg.ssm
+        di = s.d_inner(cfg.d_model)
+        per_layer = b_local * di * s.d_state * 4  # fp32 state
+        per_layer += b_local * (s.d_conv - 1) * di * 2
+        total = per_layer * plan.layers_per_stage
+        if cfg.hybrid is not None:
+            w = min(seq_len, eng.window) if eng.window else seq_len
+            total += b_local * w * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+        return total
+    per_layer = b_local * seq_len * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+    return per_layer * plan.layers_per_stage
+
+
+def max_concurrent_trials(cfg: ArchConfig, eng: EngineConfig, seq_len: int,
+                          train: bool = True) -> int:
+    """K_max: how many trials fit per chip (the paper's memory ceiling)."""
+    budget = HBM_BYTES_PER_CHIP * HBM_BUDGET_FRACTION
+    one = per_chip_bytes(cfg, dataclasses.replace(eng, n_trials=1), seq_len,
+                         train).total
+    return max(1, int(budget // max(one, 1)))
+
+
+# ---------------------------------------------------------------------------
+# Gang planning
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GangPlan:
+    """A set of same-architecture trials trained in one SPMD program."""
+
+    arch: str
+    trials: tuple  # TrialSpec...
+    engine: EngineConfig
+
+    @property
+    def bubble_fraction(self) -> float:
+        return self.engine.bubble_fraction
+
+
+def plan_gangs(trials: Sequence[TrialSpec], base_eng: EngineConfig,
+               arch_configs: dict, seq_len: int,
+               target_bubble: float = 0.10,
+               train: bool = True) -> list[GangPlan]:
+    """Greedy gang former: group by architecture, split into capacity-bounded
+    gangs, and size microbatch counts so each gang's bubble fraction meets
+    ``target_bubble`` when memory allows.
+
+    The paper's key scheduling claim (utilization → 1) is exactly the bubble
+    fraction (S−1)/(K·M+S−1) → 0; this planner drives it below the target by
+    raising K (more trials per gang) first — the Hydra move — and M second.
+    """
+    by_arch: dict[str, list[TrialSpec]] = {}
+    for t in trials:
+        by_arch.setdefault(t.arch, []).append(t)
+
+    gangs = []
+    for arch, ts in by_arch.items():
+        cfg = arch_configs[arch]
+        k_max = max_concurrent_trials(cfg, base_eng, seq_len, train)
+        i = 0
+        while i < len(ts):
+            k = min(k_max, len(ts) - i)
+            # choose M so bubble <= target: (S-1)/(K*M+S-1) <= target
+            s = base_eng.n_stages
+            m_needed = max(1, math.ceil(
+                (s - 1) * (1 - target_bubble) / (target_bubble * k)))
+            eng = dataclasses.replace(base_eng, n_trials=k,
+                                      n_microbatches=m_needed)
+            # shrink M if memory no longer fits
+            while (per_chip_bytes(cfg, eng, seq_len, train).total * k
+                   > HBM_BYTES_PER_CHIP * HBM_BUDGET_FRACTION
+                   and eng.n_microbatches > 1):
+                eng = dataclasses.replace(
+                    eng, n_microbatches=eng.n_microbatches - 1)
+            gangs.append(GangPlan(arch=arch, trials=tuple(ts[i:i + k]),
+                                  engine=eng))
+            i += k
+    return gangs
+
+
+# ---------------------------------------------------------------------------
+# Failure / straggler policy (used by runtime/elastic.py + simulator)
+# ---------------------------------------------------------------------------
+
+
+def replan_after_failure(gangs: list[GangPlan], base_eng: EngineConfig,
+                         arch_configs: dict, seq_len: int,
+                         lost_data_rows: int) -> list[GangPlan]:
+    """Shrink the data axis by the cordoned rows and re-form gangs.
+
+    A failed chip cordons its entire data row (the stage axis is a hard
+    dependency ring; the data axis is the elastic one). Trials keep their
+    identity — training resumes from the last checkpoint with a smaller
+    data axis, which changes throughput but not gradients (global batch is
+    re-sharded, not re-sized).
+    """
+    new_data = base_eng.data_size - lost_data_rows
+    if new_data < 1:
+        raise RuntimeError("mesh lost all data rows; cannot re-plan")
+    shrunk = dataclasses.replace(base_eng, data_size=new_data)
+    trials = [t for g in gangs for t in g.trials]
+    return plan_gangs(trials, shrunk, arch_configs, seq_len)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels (single source of truth for the
+allclose sweeps in tests/test_kernels_*.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import attention_reference
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, kv_offset=0,
+                        kv_len=None):
+    """q/k/v (b, s, h, hd) — direct-softmax oracle (fp32 math)."""
+    return attention_reference(q.astype(jnp.float32),
+                               k.astype(jnp.float32),
+                               v.astype(jnp.float32),
+                               causal=causal, window=window,
+                               kv_offset=kv_offset, kv_len=kv_len
+                               ).astype(q.dtype)
+
+
+def mamba_scan_ref(da, dbx, cmat, h0):
+    """Sequential oracle: h_t = da_t*h + dbx_t; y_t = Σ_n h_t C_t.
+
+    da/dbx (b, s, di, n), cmat (b, s, n), h0 (b, di, n).
+    """
+    def step(h, inp):
+        da_t, dbx_t, c_t = inp
+        h = da_t.astype(jnp.float32) * h + dbx_t.astype(jnp.float32)
+        y = jnp.sum(h * c_t[:, None, :].astype(jnp.float32), axis=-1)
+        return h, y
+
+    h, ys = lax.scan(step, h0.astype(jnp.float32),
+                     (da.swapaxes(0, 1), dbx.swapaxes(0, 1),
+                      cmat.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(da.dtype), h

@@ -1,0 +1,305 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("REPRO_EXTRA_XLA_FLAGS", ""))
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first initialization, and the production dry-run needs 512
+# placeholder host devices to build the 16x16 and 2x16x16 meshes.
+# (REPRO_EXTRA_XLA_FLAGS lets the memory-debug tooling add dump flags.)
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape) cell
+on the production mesh(es), prove memory fit, and extract roofline inputs.
+
+Usage:
+    python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+    python -m repro.launch.dryrun --all --both-meshes
+    ... --set fsdp=0 --variant no_fsdp        # hillclimb variants
+
+Each cell writes <out>/<mesh>/<variant>/<arch>__<shape>.json with the
+compiled memory analysis, loop-aware HLO costs and the roofline row. Cells
+already present are skipped (incremental, restartable).
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.analysis import hlo as hlo_lib
+from repro.analysis import roofline as roof
+from repro.configs import ASSIGNED_ARCHS, PAPER_ARCHS, SHAPES, shape_applicable
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import pipeline as pl
+from repro.core.partitioner import plan_stages
+from repro.core.scheduler import max_concurrent_trials
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.models.layers import ModelOptions
+from repro.optim.adamw import AdamW
+
+
+def engine_for_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                    overrides: dict) -> pl.EngineConfig:
+    sizes = mesh_axis_sizes(mesh)
+    n_stages = sizes["model"]
+    data = sizes["data"]
+    pods = sizes.get("pod", 1)
+    dp = data * pods
+    train = shape.kind == "train"
+    replicated = shape.global_batch < dp
+    mb = int(overrides.get("microbatch", 1))
+    rows_per_replica = (shape.global_batch if replicated
+                        else shape.global_batch // dp)
+    n_micro = max(1, rows_per_replica // mb)
+    # fsdp (weight sharding over the data axis + per-layer gather) is on for
+    # serve as well: stage-sharding alone leaves e.g. deepseek-67b at
+    # 8.3 GiB/chip of resident bf16 weights. The weight-resident variant for
+    # small archs is a §Perf hillclimb knob (--set fsdp=0).
+    base = pl.EngineConfig(
+        n_trials=1, n_microbatches=n_micro, microbatch=mb,
+        n_stages=n_stages, data_size=data, pod_size=pods,
+        pod_axis="pod" if pods > 1 else None,
+        fsdp=bool(int(overrides.get("fsdp", 1))),
+        vocab_parallel=bool(int(overrides.get("vocab_parallel", 1))),
+        batch_replicated=replicated,
+        window=(cfg.sliding_window if shape.name == "long_500k" else 0),
+        max_seq=shape.seq_len if shape.kind != "train" else 0,
+        skip_bubbles=bool(int(overrides.get("skip_bubbles", 0))),
+        layer_remat=bool(int(overrides.get("layer_remat", 1))),
+    )
+    chunks = int(overrides.get("prefill_chunks", 1))
+    if shape.kind == "prefill" and chunks > 1 and cfg.frontend is None \
+            and cfg.rope != "mrope":
+        # sequence chunks become extra pipeline slots (Hydra slot-filling)
+        base = dataclasses.replace(
+            base, n_microbatches=base.n_microbatches * chunks,
+            prefill_chunks=chunks)
+    if train:
+        k_cap = int(overrides.get("max_trials", 4))
+        k = min(max_concurrent_trials(cfg, base, shape.seq_len, train=True),
+                k_cap)
+        k = max(int(overrides.get("n_trials", k)), 1)
+        base = dataclasses.replace(base, n_trials=k)
+    return base
+
+
+def cell_structs(cfg: ArchConfig, shape: ShapeConfig, eng: pl.EngineConfig,
+                 mesh, optimizer):
+    """ShapeDtypeStructs (with shardings) for every input of the cell."""
+    plan = plan_stages(cfg, eng.n_stages)
+    max_pos = shape.seq_len if cfg.rope == "learned" else 0
+    pstruct = pl.trial_params_struct(cfg, eng, plan, dtype=jnp.bfloat16,
+                                     max_pos=max_pos)
+    pspecs = pl.param_pspecs(cfg, eng)
+    with_sh = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        pstruct, pspecs)
+
+    mbg = eng.microbatch * (1 if eng.batch_replicated
+                            else eng.data_size * eng.pod_size)
+    K, M = eng.n_trials, eng.n_microbatches
+    qlen = shape.seq_len if shape.kind != "decode" else 1
+    if shape.kind == "prefill" and eng.prefill_chunks > 1:
+        qlen = shape.seq_len // eng.prefill_chunks
+    bspecs = pl.batch_pspecs(cfg, eng, train=shape.kind == "train")
+    batch = {"tokens": jax.ShapeDtypeStruct((K, M, mbg, qlen), jnp.int32)}
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((K, M, mbg, qlen), jnp.int32)
+    elif shape.kind == "decode":
+        batch["positions"] = jax.ShapeDtypeStruct((K, M, mbg), jnp.int32)
+    if cfg.frontend is not None and shape.kind != "decode":
+        batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (K, M, mbg, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.rope == "mrope" and shape.kind != "decode":
+        batch["mrope_pos"] = jax.ShapeDtypeStruct((K, M, 3, mbg, qlen),
+                                                  jnp.int32)
+    if shape.kind == "prefill":
+        bspecs.pop("positions", None)
+    batch_sh = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        batch, {k: bspecs[k] for k in batch})
+
+    out = {"params": with_sh, "batch": batch_sh}
+    if shape.kind == "train":
+        ostruct = optimizer.init_struct(pstruct)
+        ospecs = optimizer.state_pspecs(pspecs)
+        out["opt"] = jax.tree.map(
+            lambda s, sp: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+            ostruct, ospecs)
+        out["hparams"] = {
+            "lr": jax.ShapeDtypeStruct((K,), jnp.float32),
+            "wd": jax.ShapeDtypeStruct((K,), jnp.float32)}
+        out["step"] = jax.ShapeDtypeStruct((), jnp.int32)
+    else:
+        cstruct = pl.serve_cache_struct(cfg, eng, dry_run=True)
+        cspecs = pl.serve_cache_pspecs(cfg, eng)
+        out["cache"] = jax.tree.map(
+            lambda s, sp: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+            cstruct, cspecs)
+    return out
+
+
+def run_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, mesh_name: str,
+             overrides: dict) -> dict:
+    t0 = time.time()
+    eng = engine_for_cell(cfg, shape, mesh, overrides)
+    opts = ModelOptions(param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+                        remat=bool(int(overrides.get("remat", 1))),
+                        attn_q_chunk=int(overrides.get("attn_q_chunk", 1024)),
+                        attn_kv_chunk=int(overrides.get("attn_kv_chunk", 512)),
+                        moe_expert_chunk=int(overrides.get("moe_expert_chunk",
+                                                           4)),
+                        use_mamba_kernel=bool(int(
+                            overrides.get("use_mamba_kernel", 0))),
+                        use_flash_kernel=bool(int(
+                            overrides.get("use_flash_kernel", 0))))
+    optimizer = AdamW(grad_clip=1.0)
+    structs = cell_structs(cfg, shape, eng, mesh, optimizer)
+
+    if shape.kind == "train":
+        fn = pl.make_train_step(cfg, opts, eng, mesh, optimizer, jit=False)
+        jitted = jax.jit(fn, donate_argnums=(0, 1))
+        lowered = jitted.lower(structs["params"], structs["opt"],
+                               structs["batch"], structs["hparams"],
+                               structs["step"])
+    else:
+        mode = "prefill" if shape.kind == "prefill" else "decode"
+        fn = pl.make_serve_step(cfg, opts, eng, mesh, mode, jit=False)
+        jitted = jax.jit(fn, donate_argnums=(1,))
+        lowered = jitted.lower(structs["params"], structs["cache"],
+                               structs["batch"])
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_d = {k: int(getattr(mem, k)) for k in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "peak_memory_in_bytes", "generated_code_size_in_bytes")}
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    cond_w = (eng.n_slots / eng.n_ticks) if eng.skip_bubbles else 1.0
+    costs = hlo_lib.analyze(txt, cond_weight=cond_w)
+    wall = (eng.n_ticks / eng.n_slots) if eng.skip_bubbles else 1.0
+    rl = roof.from_hlo_costs(cfg, shape, mesh_name,
+                             n_chips=mesh.devices.size, costs=costs,
+                             n_trials=eng.n_trials, wall_factor=wall)
+    # per-device live bytes: args (params/opt/cache shards) + temps
+    live = (mem_d["argument_size_in_bytes"] + mem_d["temp_size_in_bytes"]
+            + mem_d["output_size_in_bytes"] - mem_d["alias_size_in_bytes"])
+    # TPU-modeled bytes: the CPU backend's buffer assignment hoists fp32
+    # converts of whole loop stashes out of the while loops (verified via
+    # --xla_dump buffer dumps; EXPERIMENTS.md §Dry-run), which a TPU compile
+    # schedules per-iteration. The analytic model prices the real residents:
+    # param/opt shards + pipeline stash + per-layer transients + caches.
+    from repro.core.scheduler import per_chip_bytes
+    modeled = per_chip_bytes(cfg, eng, shape.seq_len,
+                             train=shape.kind == "train").total \
+        * eng.n_trials
+    return {
+        "arch": cfg.name, "shape": shape.name, "mesh": mesh_name,
+        "engine": {f.name: str(getattr(eng, f.name))
+                   for f in dataclasses.fields(eng)},
+        "n_chips": int(mesh.devices.size),
+        "timings_s": {"lower": round(t_lower, 1),
+                      "compile": round(t_compile, 1)},
+        "memory_analysis": mem_d,
+        "per_device_live_bytes": int(live),
+        "fits_16GB": bool(live < 16 * 1024 ** 3),
+        "modeled_bytes_per_device": int(modeled),
+        "fits_16GB_modeled": bool(modeled < 16 * 1024 ** 3),
+        "xla_cost_analysis_flops_bodies_once": float(ca.get("flops", -1.0)),
+        "hlo_costs": {
+            "flops_per_device": costs.flops,
+            "collective_bytes_per_device": costs.collective_bytes,
+            "hbm_bytes_per_device": costs.hbm_bytes,
+            "bytes_by_kind": costs.bytes_by_kind,
+            "count_by_kind": costs.count_by_kind,
+            "while_trip_counts": costs.trip_counts,
+        },
+        "roofline": rl.row(),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--paper-archs", action="store_true",
+                    help="also run bert-large (paper workload)")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--set", action="append", default=[],
+                    help="engine override key=val (fsdp, microbatch, ...)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = v
+
+    archs = dict(ASSIGNED_ARCHS)
+    if args.paper_archs:
+        archs["bert-large"] = PAPER_ARCHS["bert-large"]
+    if args.arch:
+        archs = {args.arch: (ASSIGNED_ARCHS | PAPER_ARCHS)[args.arch]}
+    shapes = [SHAPES[args.shape]] if args.shape else list(SHAPES.values())
+
+    mesh_kinds = []
+    if args.both_meshes:
+        mesh_kinds = [False, True]
+    else:
+        mesh_kinds = [args.multi_pod]
+
+    for multi_pod in mesh_kinds:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+        out_dir = os.path.join(args.out, mesh_name, args.variant)
+        os.makedirs(out_dir, exist_ok=True)
+        for name, cfg in archs.items():
+            for shape in shapes:
+                path = os.path.join(out_dir, f"{name}__{shape.name}.json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip-cached] {mesh_name} {name} {shape.name}")
+                    continue
+                ok, why = shape_applicable(cfg, shape)
+                if not ok:
+                    with open(path, "w") as f:
+                        json.dump({"arch": name, "shape": shape.name,
+                                   "mesh": mesh_name, "skipped": why}, f,
+                                  indent=1)
+                    print(f"[skip] {mesh_name} {name} {shape.name}: {why}")
+                    continue
+                print(f"[run ] {mesh_name} {name} {shape.name} ...",
+                      flush=True)
+                try:
+                    res = run_cell(cfg, shape, mesh, mesh_name, overrides)
+                    with open(path, "w") as f:
+                        json.dump(res, f, indent=1)
+                    r = res["roofline"]
+                    print(f"   ok lower={res['timings_s']['lower']}s "
+                          f"compile={res['timings_s']['compile']}s "
+                          f"live={res['per_device_live_bytes']/2**30:.2f}GiB "
+                          f"dom={r['dominant']} "
+                          f"roofline={r['roofline_fraction']:.4f}",
+                          flush=True)
+                except Exception as e:
+                    with open(path + ".err", "w") as f:
+                        f.write(traceback.format_exc())
+                    print(f"   FAIL {type(e).__name__}: {e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Serving driver: pipelined prefill + batched greedy decode.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --arch chatglm3-6b --smoke \
+        --n-data 2 --n-model 4 --prompt-len 16 --gen-len 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import REGISTRY
+from repro.core import pipeline as pl
+from repro.core.partitioner import plan_stages
+from repro.launch.mesh import make_test_mesh
+from repro.models.layers import ModelOptions
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="chatglm3-6b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--n-data", type=int, default=1)
+    ap.add_argument("--n-model", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="requests per data replica (pipeline slots)")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=8)
+    args = ap.parse_args()
+
+    mesh = make_test_mesh(args.n_data, args.n_model)
+    cfg = REGISTRY[args.arch]
+    if args.smoke:
+        cfg = cfg.reduced()
+    max_seq = args.prompt_len + args.gen_len
+    opts = ModelOptions()
+    eng = pl.EngineConfig(
+        n_trials=1, n_microbatches=args.batch, microbatch=1,
+        n_stages=args.n_model, data_size=args.n_data,
+        max_seq=max_seq, cache_dtype=jnp.float32)
+    plan = plan_stages(cfg, eng.n_stages)
+    key = jax.random.PRNGKey(0)
+    params = pl.init_trial_params(cfg, eng, plan, key, max_pos=max_seq)
+
+    prefill = pl.make_serve_step(cfg, opts, eng, mesh, "prefill")
+    decode = pl.make_serve_step(cfg, opts, eng, mesh, "decode")
+
+    mbg = eng.microbatch * eng.data_size
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (1, args.batch, mbg, args.prompt_len),
+                           dtype=np.int32)
+    cache = pl.serve_cache_struct(cfg, eng, dry_run=False)
+
+    t0 = time.time()
+    batch = {"tokens": jnp.asarray(prompts)}
+    cache, tok, _ = prefill(params, cache, batch)
+    generated = [np.asarray(tok)]
+    pos = args.prompt_len
+    for step in range(args.gen_len - 1):
+        dbatch = {
+            "tokens": jnp.asarray(generated[-1][..., None]),
+            "positions": jnp.full((1, args.batch, mbg), pos, jnp.int32),
+        }
+        cache, tok, _ = decode(params, cache, dbatch)
+        generated.append(np.asarray(tok))
+        pos += 1
+    dt = time.time() - t0
+    gen = np.stack(generated, axis=-1)  # (1, M, mbg, gen_len)
+    print(f"prompt shape {prompts.shape} -> generated {gen.shape} "
+          f"in {dt:.2f}s ({gen.size / dt:.1f} tok/s on CPU)")
+    for r in range(min(3, mbg)):
+        print(f"  request[{r}]: ...{prompts[0, 0, r, -4:].tolist()} => "
+              f"{gen[0, 0, r].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

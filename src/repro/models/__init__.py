@@ -1,0 +1,2 @@
+from repro.models.layers import ModelOptions  # noqa: F401
+from repro.models import blocks, layers, lm  # noqa: F401

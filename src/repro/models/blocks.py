@@ -1,0 +1,245 @@
+"""Per-family decoder/encoder blocks with functional KV/SSM cache threading.
+
+A *block* is one layer of the stack: pre-norm mixer + pre-norm FFN with
+residuals. Signature convention (used by the stacked scan in ``lm.py`` and by
+the Hydra pipeline engine):
+
+    y, new_cache = block_apply(cfg, opts, p, x, pos=..., cache=..., mode=...)
+
+``cache`` is this layer's cache slice (or None in train mode); ``pos`` carries
+position ids — (b, s) int32 for rope-1d/2d, (3, b, s) for M-RoPE. In decode
+mode ``kv_offset`` (b,) gives the current cache length per sequence.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.layers import ModelOptions
+
+
+# ---------------------------------------------------------------------------
+# Attention sub-block (shared by dense / moe / audio / vlm / encoder / hybrid)
+# ---------------------------------------------------------------------------
+
+
+def attn_apply(cfg: ArchConfig, opts: ModelOptions, p, x, *, pos,
+               cache=None, kv_offset=None, mode: str = "train",
+               window: int = 0, causal: bool = True):
+    """x (b, s, d) -> (b, s, d); cache {'k','v'}: (b, S_max, h_kv, hd)."""
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(b, s, hkv, hd)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(b, s, hkv, hd)
+    q = L.apply_rope(q, pos, cfg)
+    k = L.apply_rope(k, pos, cfg)
+    new_cache = cache
+    if mode == "train":
+        out = L.attention(q, k, v, causal=causal, window=window, opts=opts)
+    elif mode == "prefill":
+        # write k/v into the cache (offset 0); windowed caches keep the tail
+        s_cache = cache["k"].shape[1]
+        if s >= s_cache:
+            kw, vw = k[:, -s_cache:], v[:, -s_cache:]
+            pad = 0
+        else:
+            kw, vw, pad = k, v, s_cache - s
+        new_cache = {
+            "k": jnp.pad(kw, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(
+                cache["k"].dtype),
+            "v": jnp.pad(vw, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(
+                cache["v"].dtype),
+        }
+        out = L.attention(q, k, v, causal=causal, window=window, opts=opts)
+    elif mode == "append":
+        # chunked prefill: insert a whole chunk at kv_offset and attend over
+        # the cache prefix + causally within the chunk (kv_offset handles the
+        # relative positions). kv_offset is per-row (b,) but uniform within a
+        # pipeline slot (chunk index × chunk length).
+        s_cache = cache["k"].shape[1]
+
+        def updm(c, t, o):
+            return lax.dynamic_update_slice(c, t.astype(c.dtype), (o, 0, 0))
+        new_cache = {
+            "k": jax.vmap(updm)(cache["k"], k, kv_offset),
+            "v": jax.vmap(updm)(cache["v"], v, kv_offset),
+        }
+        kv_len = jnp.minimum(kv_offset + s, s_cache)
+        # offset is uniform within a slot — a traced scalar keeps the
+        # causal mask arithmetic broadcastable
+        out = L.attention(
+            q, new_cache["k"].astype(q.dtype), new_cache["v"].astype(q.dtype),
+            causal=True, window=window, kv_offset=kv_offset[0],
+            kv_len=kv_len, opts=opts)
+    elif mode == "decode":
+        # ring-buffer insert: slot = kv_offset mod cache_len (identity for
+        # unwindowed caches, rolling slot for sliding-window caches)
+        s_cache = cache["k"].shape[1]
+        slot = kv_offset % s_cache
+
+        def upd(c, t, o):
+            return lax.dynamic_update_slice(c, t.astype(c.dtype), (o, 0, 0))
+        new_cache = {
+            "k": jax.vmap(upd)(cache["k"], k, slot),
+            "v": jax.vmap(upd)(cache["v"], v, slot),
+        }
+        kv_len = jnp.minimum(kv_offset + 1, s_cache)
+        out = L.attention(
+            q, new_cache["k"].astype(q.dtype), new_cache["v"].astype(q.dtype),
+            causal=False, window=0, kv_offset=0, kv_len=kv_len, opts=opts)
+    else:
+        raise ValueError(mode)
+    out = out.reshape(b, s, h * hd)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Family blocks
+# ---------------------------------------------------------------------------
+
+
+def dense_block(cfg, opts, p, x, *, pos, cache=None, kv_offset=None,
+                mode="train", window: int = 0):
+    causal = cfg.family != "encoder"
+    if cfg.family == "encoder":
+        h = L.layer_norm(x, p["ln1_w"], p["ln1_b"], cfg.norm_eps)
+    else:
+        h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, new_cache = attn_apply(cfg, opts, p["attn"], h, pos=pos, cache=cache,
+                              kv_offset=kv_offset, mode=mode, window=window,
+                              causal=causal)
+    x = x + a
+    if cfg.family == "encoder":
+        h = L.layer_norm(x, p["ln2_w"], p["ln2_b"], cfg.norm_eps)
+    else:
+        h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + L.mlp_apply(p["mlp"], h, cfg.act)
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+def moe_block(cfg, opts, p, x, *, pos, cache=None, kv_offset=None,
+              mode="train", window: int = 0):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, new_cache = attn_apply(cfg, opts, p["attn"], h, pos=pos, cache=cache,
+                              kv_offset=kv_offset, mode=mode, window=window)
+    x = x + a
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    m, aux = L.moe_apply(p["moe"], h, n_experts=cfg.moe.n_experts,
+                         top_k=cfg.moe.top_k,
+                         capacity_factor=opts.moe_capacity_factor,
+                         act=cfg.act, expert_chunk=opts.moe_expert_chunk)
+    return x + m, new_cache, aux
+
+
+def ssm_block(cfg, opts, p, x, *, pos, cache=None, kv_offset=None,
+              mode="train", window: int = 0):
+    """Mamba1 block (falcon-mamba): norm -> mamba -> residual."""
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    ssm_s = cache["ssm"] if cache is not None else None
+    conv_s = cache["conv"] if cache is not None else None
+    y, new_ssm, new_conv = L.mamba1_mix(p["mamba"], h, cfg, ssm_s, conv_s,
+                                        opts)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"ssm": new_ssm, "conv": new_conv.astype(cache["conv"].dtype)}
+    return x + y, new_cache, jnp.zeros((), jnp.float32)
+
+
+def hybrid_backbone_block(cfg, opts, p, x, *, pos, cache=None, kv_offset=None,
+                          mode="train", window: int = 0):
+    """Zamba2 backbone layer: Mamba2 mixer."""
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    ssm_s = cache["ssm"] if cache is not None else None
+    conv_s = cache["conv"] if cache is not None else None
+    y, new_ssm, new_conv = L.mamba2_mix(p["mamba"], h, cfg, ssm_s, conv_s,
+                                        opts)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"ssm": new_ssm, "conv": new_conv.astype(cache["conv"].dtype)}
+    return x + y, new_cache, jnp.zeros((), jnp.float32)
+
+
+def shared_attn_block(cfg, opts, p, x, *, pos, cache=None, kv_offset=None,
+                      mode="train", window: int = 0):
+    """Zamba2's shared attention+MLP block (weights shared across sites)."""
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, new_cache = attn_apply(cfg, opts, p["attn"], h, pos=pos, cache=cache,
+                              kv_offset=kv_offset, mode=mode, window=window)
+    x = x + a
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + L.mlp_apply(p["mlp"], h, "swiglu")
+    return x, new_cache
+
+
+BLOCK_FNS = {
+    "dense": dense_block,
+    "audio": dense_block,
+    "vlm": dense_block,
+    "encoder": dense_block,
+    "moe": moe_block,
+    "ssm": ssm_block,
+    "hybrid": hybrid_backbone_block,
+}
+
+
+def block_fn_for(cfg: ArchConfig):
+    return BLOCK_FNS[cfg.family]
+
+
+# ---------------------------------------------------------------------------
+# Per-layer cache structure (shapes only — used for init and dry-run specs)
+# ---------------------------------------------------------------------------
+
+
+def layer_cache_shape(cfg: ArchConfig, batch: int, max_seq: int,
+                      cache_dtype=jnp.bfloat16) -> dict:
+    """Shape/dtype template for ONE layer's cache (no leading layer dim)."""
+    if cfg.family == "ssm":
+        s = cfg.ssm
+        di = s.d_inner(cfg.d_model)
+        return {
+            "ssm": jax.ShapeDtypeStruct((batch, di, s.d_state), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((batch, s.d_conv - 1, di), cache_dtype),
+        }
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        di = s.d_inner(cfg.d_model)
+        nh = s.n_ssm_heads(cfg.d_model)
+        conv_dim = di + 2 * s.n_groups * s.d_state
+        return {
+            "ssm": jax.ShapeDtypeStruct(
+                (batch, nh, s.head_dim, s.d_state), jnp.float32),
+            "conv": jax.ShapeDtypeStruct(
+                (batch, s.d_conv - 1, conv_dim), cache_dtype),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct(
+            (batch, max_seq, cfg.n_kv_heads, cfg.head_dim), cache_dtype),
+        "v": jax.ShapeDtypeStruct(
+            (batch, max_seq, cfg.n_kv_heads, cfg.head_dim), cache_dtype),
+    }
+
+
+def shared_cache_shape(cfg: ArchConfig, batch: int, max_seq: int,
+                       cache_dtype=jnp.bfloat16,
+                       window: int = 0) -> Optional[dict]:
+    """Cache template for ONE shared-attention site (hybrid archs).
+
+    ``window`` > 0 (long-context serving) bounds the cache to the sliding
+    window; the engine activates it only for the long_500k shape.
+    """
+    if cfg.hybrid is None:
+        return None
+    seq = min(max_seq, window) if window > 0 else max_seq
+    return {
+        "k": jax.ShapeDtypeStruct(
+            (batch, seq, cfg.n_kv_heads, cfg.head_dim), cache_dtype),
+        "v": jax.ShapeDtypeStruct(
+            (batch, seq, cfg.n_kv_heads, cfg.head_dim), cache_dtype),
+    }

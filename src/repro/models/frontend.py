@@ -1,0 +1,31 @@
+"""Modality frontend STUBS (per task spec: [audio]/[vlm] entries specify the
+transformer backbone only; ``input_specs()`` provides precomputed frame/patch
+embeddings).
+
+These helpers generate synthetic frontend embeddings with the right
+shapes/statistics for smoke tests and examples — a real deployment would
+replace them with an EnCodec encoder (musicgen) or a ViT tower (qwen2-vl).
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def synth_frontend_embeds(cfg: ArchConfig, key, batch: int,
+                          dtype=jnp.float32):
+    if cfg.frontend is None:
+        return None
+    return jax.random.normal(
+        key, (batch, cfg.n_frontend_tokens, cfg.d_model)).astype(dtype)
+
+
+def synth_mrope_positions(cfg: ArchConfig, batch: int, seq: int):
+    """Text-style M-RoPE ids: all three sections share the linear position.
+
+    A real VLM driver would give image patches (t, h, w) grid positions; for
+    the backbone-only reproduction the linear fallback is what Qwen2-VL uses
+    for pure-text segments.
+    """
+    base = jnp.broadcast_to(jnp.arange(seq), (batch, seq))
+    return jnp.broadcast_to(base, (3, batch, seq))

@@ -1,0 +1,561 @@
+"""Core neural-net layers in pure JAX (no flax): norms, RoPE variants, GQA
+attention (full / chunked-flash / decode), SwiGLU & GELU MLPs, top-k MoE with
+scatter-based grouped dispatch, Mamba1 selective scan and Mamba2 SSD.
+
+Everything is a pure function over explicit parameter pytrees so the Hydra
+pipeline engine can stack layers along a leading axis and ``lax.scan`` them
+per stage.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelOptions:
+    """Execution knobs (not architecture): precision, remat, attention impl."""
+
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+    remat: bool = False  # activation-checkpoint each block
+    attn_q_chunk: int = 2048  # flash-style chunking (jnp path)
+    attn_kv_chunk: int = 1024
+    use_flash_kernel: bool = False  # dispatch to Pallas kernel (TPU target)
+    use_mamba_kernel: bool = False
+    moe_capacity_factor: float = 1.25
+    moe_expert_chunk: int = 0  # >0: scan expert FFNs in groups of this size
+    # (bounds the fp32 weight-grad/gather transients to one group's worth)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * lax.rsqrt(var + eps)).astype(dt) * w
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * lax.rsqrt(var + eps)).astype(dt) * w + b
+
+
+def gated_rms_norm(x, gate, w, eps: float = 1e-5):
+    """Mamba2 output norm: RMSNorm(x * silu(gate))."""
+    return rms_norm(x * jax.nn.silu(gate), w, eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (1d / 2d-half / M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def _rope_freqs(head_dim: int, theta: float, dtype=jnp.float32):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=dtype) / half))
+
+
+def rope_cos_sin(positions, head_dim: int, theta: float):
+    """positions (..., s) -> cos/sin (..., s, head_dim//2)."""
+    freqs = _rope_freqs(head_dim, theta)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate(x, cos, sin):
+    """x (..., s, h, d) with cos/sin (..., s, d//2): rotate pairs (even, odd)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]  # broadcast over heads
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def apply_rope(x, positions, cfg: ArchConfig):
+    """Apply the config's rotary variant. x: (b, s, h, hd).
+
+    - "1d": standard rotary over the full head dim.
+    - "2d": ChatGLM-style — rotary on the first half of the head dim only.
+    - "mrope": Qwen2-VL — head-dim split in 3 sections driven by 3 position
+      streams (temporal/height/width); ``positions`` has shape (3, b, s).
+    - "none"/"learned": identity (positions handled at the embedding).
+    """
+    if cfg.rope in ("none", "learned"):
+        return x
+    hd = cfg.head_dim
+    if cfg.rope == "1d":
+        cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta)
+        return _rotate(x, cos, sin)
+    if cfg.rope == "2d":
+        rot, keep = jnp.split(x, [hd // 2], axis=-1)
+        cos, sin = rope_cos_sin(positions, hd // 2, cfg.rope_theta)
+        return jnp.concatenate([_rotate(rot, cos, sin), keep], axis=-1)
+    if cfg.rope == "mrope":
+        # sections of the *pair* dimension (hd//2 pairs): 1/4 temporal, 3/8 h, 3/8 w
+        half = hd // 2
+        s_t = half // 4
+        s_h = (half - s_t) // 2
+        sections = [s_t, s_h, half - s_t - s_h]
+        cos_parts, sin_parts = [], []
+        for i, sec in enumerate(sections):
+            freqs = _rope_freqs(hd, cfg.rope_theta)
+            lo = sum(sections[:i])
+            ang = positions[i].astype(jnp.float32)[..., None] * freqs[lo:lo + sec]
+            cos_parts.append(jnp.cos(ang))
+            sin_parts.append(jnp.sin(ang))
+        cos = jnp.concatenate(cos_parts, axis=-1)
+        sin = jnp.concatenate(sin_parts, axis=-1)
+        return _rotate(x, cos, sin)
+    raise ValueError(cfg.rope)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def repeat_kv(k, n_rep: int):
+    """(b, s, h_kv, hd) -> (b, s, h_kv * n_rep, hd).
+
+    Only for small oracle comparisons — production paths use grouped-einsum
+    GQA (never materializing the repeated cache in HBM).
+    """
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(
+        b, s, h * n_rep, d)
+
+
+def attention_reference(q, k, v, *, causal: bool, window: int = 0,
+                        kv_offset: int = 0, kv_len=None):
+    """Direct softmax attention with grouped-query support.
+
+    q (b,sq,hq,hd), k/v (b,sk,hkv,hd) with hq = g·hkv. GQA is handled by a
+    grouped einsum — the kv tensors are never expanded in memory (a 4-8 GB
+    per-layer saving for the 8:1 GQA archs at 32k decode).
+
+    ``kv_offset`` is the absolute position of q[0] minus that of k[0] (for
+    decode, offset = cache length). ``kv_len`` optionally masks kv positions
+    >= kv_len (ragged cache). ``window`` > 0 restricts to a sliding window.
+    """
+    b, sq, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, hd)
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(sq)[:, None] + kv_offset
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    mask_b = jnp.broadcast_to(mask, (b, 1, 1, sq, sk))
+    if kv_len is not None:
+        mask_b = mask_b & (kpos < kv_len[:, None, None, None, None])
+    scores = jnp.where(mask_b, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(q.dtype), v)
+    return out.reshape(b, sq, hq, hd)
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      kv_offset: int = 0, kv_len=None,
+                      q_chunk: int = 2048, kv_chunk: int = 1024):
+    """Flash-style online-softmax attention in pure jnp, O(chunk) memory,
+    grouped-query aware (kv never expanded).
+
+    Outer loop over q chunks (rematerialized), inner ``lax.scan`` over kv
+    chunks with running (max, denom, accum). Matches ``attention_reference``.
+    """
+    b, sq, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    # pad to multiples
+    sq_p = -(-sq // q_chunk) * q_chunk
+    sk_p = -(-sk // kv_chunk) * kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    n_q, n_k = sq_p // q_chunk, sk_p // kv_chunk
+    scale = 1.0 / math.sqrt(hd)
+    if kv_len is None:
+        kv_len = jnp.full((b,), sk, jnp.int32)
+
+    def q_block(qi, q_blk):
+        q_start = qi * q_chunk
+        qg = q_blk.reshape(b, q_chunk, hkv, g, hd)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry  # (b, hkv, g, qc[, hd])
+            k_start = ki * kv_chunk
+            k_blk = lax.dynamic_slice_in_dim(kp, k_start, kv_chunk, axis=1)
+            v_blk = lax.dynamic_slice_in_dim(vp, k_start, kv_chunk, axis=1)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
+                           k_blk).astype(jnp.float32) * scale
+            qpos = q_start + jnp.arange(q_chunk)[:, None] + kv_offset
+            kpos = k_start + jnp.arange(kv_chunk)[None, :]
+            msk = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                msk &= kpos <= qpos
+            if window > 0:
+                msk &= kpos > qpos - window
+            msk_b = msk[None, None, None] & (
+                kpos < kv_len[:, None, None, None, None])
+            s = jnp.where(msk_b, s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # guard all -inf rows
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(msk_b, p, 0.0)
+            alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, hd), jnp.float32)
+        # flash-style backward: recompute the score block per kv step instead
+        # of letting scan linearization stash every (q_chunk, kv_chunk) probs
+        # matrix (which costs the full (sq, sk) scores in fp32)
+        (m, l, acc), _ = lax.scan(jax.checkpoint(kv_step), (m0, l0, a0),
+                                  jnp.arange(n_k))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (b, hkv, g, qc, hd) -> (b, qc, hq, hd)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(b, q_chunk, hq, hd)
+        return out.astype(q.dtype)
+
+    q_block = jax.checkpoint(q_block, static_argnums=())
+    blocks = [q_block(qi, lax.dynamic_slice_in_dim(qp, qi * q_chunk, q_chunk, 1))
+              for qi in range(n_q)]
+    out = jnp.concatenate(blocks, axis=1)[:, :sq]
+    return out
+
+
+def attention(q, k, v, *, causal: bool, window: int = 0, kv_offset: int = 0,
+              kv_len=None, opts: ModelOptions):
+    """Dispatch: Pallas flash kernel (TPU target) / jnp chunked / direct."""
+    sq, sk = q.shape[1], k.shape[1]
+    if opts.use_flash_kernel and sq > 1 and kv_len is None:
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.flash_attention(
+            q, k, v, causal=causal, window=window, kv_offset=kv_offset)
+    # direct path only when the score tensor is small (decode q=1 scores are
+    # (b, h, 1, sk) — linear in cache length); otherwise stream chunks
+    if sq == 1 or sq * sk <= 512 * 512:
+        return attention_reference(q, k, v, causal=causal, window=window,
+                                   kv_offset=kv_offset, kv_len=kv_len)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             kv_offset=kv_offset, kv_len=kv_len,
+                             q_chunk=opts.attn_q_chunk,
+                             kv_chunk=opts.attn_kv_chunk)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_apply(p, x, act: str):
+    if act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["w_down"])
+    h = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    return jnp.einsum("bsf,fd->bsd", jax.nn.gelu(h), p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (scatter-based grouped dispatch; capacity-bounded)
+# ---------------------------------------------------------------------------
+
+
+def _expert_ffn(p_g, buckets_g, act: str):
+    """Dense FFN over a group of experts. buckets_g (e, c, d)."""
+    if act == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", buckets_g, p_g["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", buckets_g, p_g["w_up"])
+        return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p_g["w_down"])
+    h = jnp.einsum("ecd,edf->ecf", buckets_g, p_g["w_up"])
+    return jnp.einsum("ecf,efd->ecd", jax.nn.gelu(h), p_g["w_down"])
+
+
+def moe_apply(p, x, *, n_experts: int, top_k: int, capacity_factor: float,
+              act: str = "swiglu", expert_chunk: int = 0):
+    """Top-k MoE FFN. x (b, s, d) -> (b, s, d), plus load-balance aux loss.
+
+    Tokens are scattered into per-expert capacity buckets (E, C, d) so the
+    expert matmuls are dense and FLOPs stay ~capacity_factor × active — no
+    E/k-fold dense-dispatch waste. Overflowing tokens are dropped (standard
+    capacity semantics); the residual path keeps them represented.
+    """
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xf, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = lax.top_k(probs, top_k)  # (t, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    capacity = max(int(capacity_factor * t * top_k / n_experts), top_k)
+    # position of each (t, k) assignment within its expert's bucket
+    flat_e = expert_idx.reshape(-1)  # (t*k,)
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)  # (t*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) * onehot  # 1-based rank
+    pos = (pos_in_e.sum(axis=-1) - 1).reshape(t, top_k)  # (t, k)
+    keep = pos < capacity
+    dest = jnp.where(keep, flat_e.reshape(t, top_k) * capacity + pos, -1)
+
+    # scatter tokens into buckets (drop overflow via mode="drop")
+    buckets = jnp.zeros((n_experts * capacity, d), x.dtype)
+    src = jnp.repeat(xf[:, None, :], top_k, axis=1).reshape(t * top_k, d)
+    buckets = buckets.at[dest.reshape(-1)].add(
+        jnp.where(keep.reshape(-1, 1), src, 0), mode="drop")
+    buckets = buckets.reshape(n_experts, capacity, d)
+
+    # dense per-expert FFN — optionally scanned in expert groups so the fp32
+    # weight-gradient / gathered-weight transients in backward are bounded by
+    # one group (E=16 × (d, f) fp32 buffers otherwise dominate HBM)
+    if expert_chunk and 0 < expert_chunk < n_experts \
+            and n_experts % expert_chunk == 0:
+        ng = n_experts // expert_chunk
+        w = {k: p[k].reshape(ng, expert_chunk, *p[k].shape[1:])
+             for k in ("w_gate", "w_up", "w_down") if k in p}
+        b_g = buckets.reshape(ng, expert_chunk, capacity, d)
+
+        @jax.checkpoint
+        def group(_, inp):
+            p_g, bg = inp
+            return None, _expert_ffn(p_g, bg, act)
+
+        _, y = lax.scan(group, None, (w, b_g))
+        y = y.reshape(n_experts, capacity, d)
+    else:
+        y = _expert_ffn(p, buckets, act)
+    y = y.reshape(n_experts * capacity, d)
+
+    # gather back, weight by gates
+    safe_dest = jnp.where(keep, dest, 0)
+    gathered = y[safe_dest.reshape(-1)].reshape(t, top_k, d)
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    out = jnp.einsum("tkd,tk->td", gathered, gate_vals.astype(x.dtype))
+
+    # load-balance auxiliary loss (Switch-style)
+    me = probs.mean(axis=0)  # (E,)
+    ce = jax.nn.one_hot(expert_idx, n_experts).sum(axis=(0, 1)) / (t * top_k)
+    aux = n_experts * jnp.sum(me * ce)
+    return out.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba1 (selective scan) and Mamba2 (SSD, chunked)
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv1d(x, w, b, state=None):
+    """Depthwise causal conv. x (bt, s, c), w (c, width), state (bt, width-1, c).
+
+    Returns (y, new_state) where new_state is the trailing (width-1) inputs.
+    """
+    width = w.shape[-1]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    xe = jnp.concatenate([state, x], axis=1)
+    # depthwise conv as sum of shifted slices (width is tiny, typically 4)
+    s = x.shape[1]
+    y = sum(xe[:, i:i + s] * w[:, i] for i in range(width))
+    y = y + b
+    new_state = xe[:, -(width - 1):] if width > 1 else state
+    return y, new_state
+
+
+def mamba1_mix(p, x, cfg: ArchConfig, ssm_state=None, conv_state=None,
+               opts: Optional[ModelOptions] = None):
+    """Mamba1 selective-scan mixer. x (b, s, d) -> (b, s, d).
+
+    Train/prefill: chunked scan over time (rematerialized chunk bodies keep
+    the (b, ck, di, n) intermediates transient) or the Pallas kernel. Decode
+    (s==1): one recurrent step against (conv_state, ssm_state).
+    Returns (y, new_ssm_state, new_conv_state).
+    """
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    di, n = s_cfg.d_inner(cfg.d_model), s_cfg.d_state
+    r = s_cfg.resolved_dt_rank(cfg.d_model)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin, new_conv = _causal_conv1d(xin, p["conv_w"], p["conv_b"], conv_state)
+    xin = jax.nn.silu(xin)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))  # (di, n)
+
+    def ssm_inputs(x_chunk):
+        """x_chunk (b, t, di) -> decay da (b,t,di,n), input dbx (b,t,di,n), C."""
+        proj = jnp.einsum("bsi,ie->bse", x_chunk, p["x_proj"])
+        dt_in, bmat, cmat = jnp.split(proj, [r, r + n], axis=-1)
+        dt = jax.nn.softplus(
+            jnp.einsum("bsr,ri->bsi", dt_in, p["dt_proj"]) + p["dt_bias"])
+        da = jnp.exp(dt.astype(jnp.float32)[..., None] * a)
+        dbx = (dt.astype(jnp.float32) * x_chunk.astype(jnp.float32))[..., None] \
+            * bmat.astype(jnp.float32)[:, :, None, :]
+        return da, dbx, cmat.astype(jnp.float32)
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((b, di, n), jnp.float32)
+
+    if s == 1:
+        da, dbx, cmat = ssm_inputs(xin)
+        h = da[:, 0] * ssm_state + dbx[:, 0]  # (b, di, n)
+        new_state = h
+        y = jnp.einsum("bin,bn->bi", h, cmat[:, 0])[:, None]  # (b, 1, di)
+    elif opts is not None and opts.use_mamba_kernel:
+        from repro.kernels import ops as kernel_ops
+        da, dbx, cmat = ssm_inputs(xin)
+        y, new_state = kernel_ops.mamba_scan(da, dbx, cmat, ssm_state)
+    else:
+        ck = min(s_cfg.chunk_size, s)
+        s_p = -(-s // ck) * ck
+        xin_p = jnp.pad(xin, ((0, 0), (0, s_p - s), (0, 0)))
+        nc = s_p // ck
+        xin_c = xin_p.reshape(b, nc, ck, di).swapaxes(0, 1)  # (nc, b, ck, di)
+        valid = (jnp.arange(s_p) < s).reshape(nc, ck)
+
+        @jax.checkpoint
+        def chunk_body(h, inp):
+            x_chunk, v_chunk = inp
+            da, dbx, cmat = ssm_inputs(x_chunk)
+            # padded steps must not decay the carried state
+            da = jnp.where(v_chunk[None, :, None, None], da, 1.0)
+            dbx = jnp.where(v_chunk[None, :, None, None], dbx, 0.0)
+
+            def step(hc, s_inp):
+                da_t, dbx_t = s_inp
+                hc = da_t * hc + dbx_t
+                return hc, hc
+
+            h_new, h_all = lax.scan(
+                step, h, (da.swapaxes(0, 1), dbx.swapaxes(0, 1)))
+            y_c = jnp.einsum("sbin,bsn->bsi", h_all, cmat)
+            return h_new, y_c
+
+        new_state, y_c = lax.scan(chunk_body, ssm_state, (xin_c, valid))
+        y = y_c.swapaxes(0, 1).reshape(b, s_p, di)[:, :s]
+
+    y = (y + xin.astype(jnp.float32) * p["D"]).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, new_state, new_conv
+
+
+def mamba2_mix(p, x, cfg: ArchConfig, ssm_state=None, conv_state=None,
+               opts: Optional[ModelOptions] = None):
+    """Mamba2 (SSD) mixer, chunked "state-space dual" form. x (b, s, d).
+
+    Scalar-per-head log-decay ``da``; state (b, nh, hd, n). Within a chunk the
+    output is the attention-like form (C Bᵀ ⊙ L) X with the stable pairwise
+    decay matrix L[t,u] = exp(cum_t − cum_u) (t ≥ u, exponent ≤ 0); states are
+    carried across chunks with per-chunk decay. Returns
+    (y, new_ssm_state, new_conv_state).
+    """
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    di = s_cfg.d_inner(cfg.d_model)
+    n, g = s_cfg.d_state, s_cfg.n_groups
+    hd = s_cfg.head_dim
+    nh = di // hd
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc, dt_in = jnp.split(proj, [di, di + di + 2 * g * n], axis=-1)
+    xbc, new_conv = _causal_conv1d(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xin, bmat, cmat = jnp.split(xbc, [di, di + g * n], axis=-1)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + p["dt_bias"])  # (b, s, nh)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))  # (nh,)
+    xh = xin.reshape(b, s, nh, hd)
+    rep = nh // g
+    bm = jnp.repeat(bmat.reshape(b, s, g, n), rep, axis=2)  # (b, s, nh, n)
+    cm = jnp.repeat(cmat.reshape(b, s, g, n), rep, axis=2)
+    da = dt * a  # (b, s, nh) log-decay per step (<= 0)
+
+    if ssm_state is None:
+        ssm_state = jnp.zeros((b, nh, hd, n), jnp.float32)
+
+    if s == 1:
+        dbx = (dt[:, 0, :, None, None] * xh[:, 0, :, :, None].astype(jnp.float32)
+               * bm[:, 0, :, None, :].astype(jnp.float32))  # (b, nh, hd, n)
+        h = jnp.exp(da[:, 0])[:, :, None, None] * ssm_state + dbx
+        new_state = h
+        y = jnp.einsum("bhen,bhn->bhe", h, cm[:, 0].astype(jnp.float32))
+        y = y.reshape(b, 1, di)
+    else:
+        ck = min(s_cfg.chunk_size, s)
+        s_p = -(-s // ck) * ck
+        pad = s_p - s
+        da_p = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+        xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bm_p = jnp.pad(bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cm_p = jnp.pad(cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        nc = s_p // ck
+        to_c = lambda t: t.reshape(b, nc, ck, *t.shape[2:]).swapaxes(0, 1)
+        da_c, xh_c, bm_c, cm_c, dt_c = map(to_c, (da_p, xh_p, bm_p, cm_p, dt_p))
+        valid = (jnp.arange(s_p) < s).reshape(nc, ck)
+
+        @jax.checkpoint
+        def chunk_body(h_enter, inp):
+            da_k, xh_k, bm_k, cm_k, dt_k, v_k = inp  # leading dim b, then ck
+            # padded steps: no decay (log-decay 0), no input (x already 0)
+            da_k = jnp.where(v_k[None, :, None], da_k, 0.0)
+            cum = jnp.cumsum(da_k, axis=1)  # (b, ck, nh), inclusive
+            # pairwise decay L[t,u] = exp(cum_t - cum_u) for u <= t (exp <= 1)
+            diff = cum[:, :, None, :] - cum[:, None, :, :]  # (b, ck, ck, nh)
+            tri = jnp.tril(jnp.ones((ck, ck), bool))[None, :, :, None]
+            L = jnp.where(tri, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+            # intra-chunk: scores[t,u] = (C_t·B_u) L[t,u] dt_u
+            gb = jnp.einsum("bthn,buhn->btuh", cm_k, bm_k)
+            scores = gb * L * dt_k[:, None, :, :]
+            y_intra = jnp.einsum("btuh,buhe->bthe", scores,
+                                 xh_k.astype(jnp.float32))
+            # inter-chunk: decay state entering the chunk to each position
+            y_inter = jnp.einsum("bthn,bhen->bthe",
+                                 cm_k * jnp.exp(cum)[..., None], h_enter)
+            # state at chunk end
+            wexit = jnp.exp(cum[:, -1:, :] - cum) * dt_k  # (b, ck, nh)
+            h_in = jnp.einsum("buh,buhe,buhn->bhen", wexit,
+                              xh_k.astype(jnp.float32),
+                              bm_k.astype(jnp.float32))
+            h_exit = jnp.exp(cum[:, -1])[:, :, None, None] * h_enter + h_in
+            return h_exit, (y_intra + y_inter)
+
+        new_state, y_c = lax.scan(chunk_body, ssm_state,
+                                  (da_c, xh_c.astype(jnp.float32),
+                                   bm_c.astype(jnp.float32),
+                                   cm_c.astype(jnp.float32), dt_c, valid))
+        y = y_c.swapaxes(0, 1).reshape(b, s_p, nh, hd)[:, :s].reshape(b, s, di)
+
+    y = (y + xh.reshape(b, s, di).astype(jnp.float32) *
+         jnp.repeat(p["D"], hd)).astype(x.dtype)
+    y = gated_rms_norm(y, z, p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, new_state, new_conv

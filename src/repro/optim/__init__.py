@@ -1,0 +1,1 @@
+from repro.optim.adamw import AdamW, SGD, warmup_cosine_schedule  # noqa: F401

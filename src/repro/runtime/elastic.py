@@ -1,0 +1,83 @@
+"""Elastic re-meshing: shrink/grow the data axis around failed slices.
+
+The stage ("model") axis is a hard dependency ring — losing a stage chip
+breaks the pipeline — so elasticity operates on the data axis: a failure
+cordons the data row containing the chip, the mesh is rebuilt from surviving
+rows, gangs are re-planned (same trials, smaller data axis) and training
+resumes from the last checkpoint. Parameter shards re-place automatically
+because shardings are derived from the new mesh, and the deterministic data
+pipeline keeps gradients identical (global batch re-sharded, not re-sized).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.pipeline import EngineConfig
+from repro.core import scheduler as sched
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshHealth:
+    """Which (pod, data) rows are alive. The stage axis is all-or-nothing."""
+
+    alive_rows: tuple  # of (pod_idx, data_idx)
+    n_pods: int
+    n_data: int
+
+    @classmethod
+    def fresh(cls, n_pods: int, n_data: int):
+        return cls(tuple((p, d) for p in range(n_pods) for d in range(n_data)),
+                   n_pods, n_data)
+
+    def cordon(self, pod: int, data_row: int) -> "MeshHealth":
+        alive = tuple(r for r in self.alive_rows if r != (pod, data_row))
+        if not alive:
+            raise RuntimeError("no healthy rows remain")
+        return dataclasses.replace(self, alive_rows=alive)
+
+    @property
+    def usable_data_rows(self) -> int:
+        """Largest uniform data-axis size across pods (SPMD needs a box)."""
+        per_pod = {}
+        for p, d in self.alive_rows:
+            per_pod.setdefault(p, 0)
+            per_pod[p] += 1
+        return min(per_pod.values())
+
+    @property
+    def usable_pods(self) -> int:
+        return len({p for p, _ in self.alive_rows})
+
+
+def rebuild_mesh(devices: Sequence, health: MeshHealth, n_stages: int,
+                 multi_pod: bool):
+    """Build the largest healthy box mesh from surviving devices."""
+    n_data = health.usable_data_rows
+    n_pods = health.usable_pods if multi_pod else 1
+    need = n_pods * n_data * n_stages
+    if len(devices) < need:
+        raise RuntimeError(f"need {need} devices, have {len(devices)}")
+    dev = np.asarray(devices[:need])
+    if multi_pod:
+        dev = dev.reshape(n_pods, n_data, n_stages)
+        return jax.sharding.Mesh(dev, ("pod", "data", "model"))
+    dev = dev.reshape(n_data, n_stages)
+    return jax.sharding.Mesh(dev, ("data", "model"))
+
+
+def shrink_engine(eng: EngineConfig, health: MeshHealth) -> EngineConfig:
+    return dataclasses.replace(
+        eng, data_size=health.usable_data_rows,
+        pod_size=health.usable_pods if eng.pod_axis else 1)
+
+
+def elastic_replan(gangs, base_eng: EngineConfig, arch_configs: dict,
+                   seq_len: int, health: MeshHealth):
+    """Scheduler hook: same trials, shrunken mesh."""
+    lost = base_eng.data_size - health.usable_data_rows
+    return sched.replan_after_failure(gangs, base_eng, arch_configs, seq_len,
+                                      lost_data_rows=lost)

@@ -1,0 +1,119 @@
+"""Fault-tolerant training loop: checkpoint/restart, preemption handling,
+failure injection (for tests) and straggler notes.
+
+Straggler mitigation at Hydra's granularity: the compiled SPMD program has no
+software stragglers (every device runs the same schedule); *hardware*
+stragglers/failures surface as a lost mesh slice. Policy: checkpoint-restart
+with the data axis shrunk around the cordoned slice
+(``scheduler.replan_after_failure`` / ``runtime.elastic``) — gradients are
+unchanged because the global batch is re-sharded, not re-sized, and the data
+pipeline is deterministic per (trial, step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Optional
+
+from repro.checkpoint import ckpt as ckpt_lib
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    n_steps: int
+    checkpoint_every: int = 50
+    ckpt_dir: Optional[str] = None
+    max_restarts: int = 3
+    keep_checkpoints: int = 3
+
+
+@dataclasses.dataclass
+class LoopReport:
+    final_state: Any
+    steps_run: int
+    restarts: int
+    resumed_from: Optional[int]
+    wall_time_s: float
+    step_metrics: list
+
+
+class PreemptionGuard:
+    """Checkpoint-on-SIGTERM: cooperative preemption for managed clusters."""
+
+    def __init__(self):
+        self.requested = False
+        self._prev = None
+
+    def __enter__(self):
+        def handler(signum, frame):
+            self.requested = True
+        try:
+            self._prev = signal.signal(signal.SIGTERM, handler)
+        except ValueError:  # non-main thread (tests)
+            self._prev = None
+        return self
+
+    def __exit__(self, *exc):
+        if self._prev is not None:
+            signal.signal(signal.SIGTERM, self._prev)
+        return False
+
+
+def run_with_restarts(step_fn: Callable[[Any, int], tuple],
+                      init_state: Any, loop: LoopConfig,
+                      failure_injector: Optional[Callable[[int], None]] = None
+                      ) -> LoopReport:
+    """Run ``state, metrics = step_fn(state, step)`` for n_steps with
+    checkpoint/restart.
+
+    On an exception (real failure or injected), reloads the latest checkpoint
+    and continues, up to ``max_restarts``. The state pytree must be
+    checkpoint-restorable (arrays only).
+    """
+    t0 = time.monotonic()
+    saver = (ckpt_lib.AsyncCheckpointer(loop.ckpt_dir, loop.keep_checkpoints)
+             if loop.ckpt_dir else None)
+    state = init_state
+    start_step = 0
+    resumed_from = None
+    if loop.ckpt_dir:
+        latest = ckpt_lib.latest_step(loop.ckpt_dir)
+        if latest is not None:
+            state = ckpt_lib.restore(loop.ckpt_dir, latest, init_state)
+            start_step = latest
+            resumed_from = latest
+    restarts = 0
+    metrics_log = []
+    step = start_step
+    with PreemptionGuard() as guard:
+        while step < loop.n_steps:
+            try:
+                if failure_injector is not None:
+                    failure_injector(step)
+                state, metrics = step_fn(state, step)
+                metrics_log.append(metrics)
+                step += 1
+                at_ckpt = loop.ckpt_dir and (
+                    step % loop.checkpoint_every == 0 or step == loop.n_steps)
+                if at_ckpt or (guard.requested and loop.ckpt_dir):
+                    saver.save(step, state, extra={"step": step})
+                if guard.requested:
+                    break
+            except Exception:
+                restarts += 1
+                if restarts > loop.max_restarts or not loop.ckpt_dir:
+                    raise
+                saver.wait()
+                latest = ckpt_lib.latest_step(loop.ckpt_dir)
+                if latest is None:
+                    state, step = init_state, 0
+                else:
+                    state = ckpt_lib.restore(loop.ckpt_dir, latest, init_state)
+                    step = latest
+    if saver:
+        saver.wait()
+    return LoopReport(final_state=state, steps_run=step - start_step,
+                      restarts=restarts, resumed_from=resumed_from,
+                      wall_time_s=time.monotonic() - t0,
+                      step_metrics=metrics_log)

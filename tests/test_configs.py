@@ -1,0 +1,84 @@
+"""Config registry: exact assigned numbers, param counts vs published sizes,
+reduced smoke configs, shape applicability."""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import (ASSIGNED_ARCHS, REGISTRY, SHAPES, get_config,
+                           input_specs, list_archs, shape_applicable)
+
+
+EXPECTED = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab, ~params B)
+    "yi-34b": (60, 7168, 56, 8, 20480, 64000, 34.4),
+    "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152, 16.0),
+    "deepseek-67b": (95, 8192, 64, 8, 22016, 102400, 67.4),
+    "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024, 6.2),
+    "musicgen-medium": (48, 1536, 24, 24, 6144, 2048, 1.4),
+    "falcon-mamba-7b": (64, 4096, 0, 0, 0, 65024, 7.3),
+    "zamba2-7b": (81, 3584, 32, 32, 14336, 32000, 6.8),
+    "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064, 72.7),
+    "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155, 3.4),
+    "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048, 101.7),
+}
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED))
+def test_assigned_config_numbers(name):
+    cfg = get_config(name)
+    nl, d, h, kv, ff, v, nb = EXPECTED[name]
+    assert cfg.n_layers == nl
+    assert cfg.d_model == d
+    assert cfg.n_heads == h
+    assert cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    assert abs(cfg.param_count() / 1e9 - nb) < 0.15 * nb
+
+
+def test_registry_covers_ten_assigned():
+    assert len(ASSIGNED_ARCHS) == 10
+    assert set(EXPECTED) == set(ASSIGNED_ARCHS)
+    assert "bert-large" in REGISTRY and "mlp-1m" in REGISTRY
+    assert len(list_archs()) == 12
+
+
+def test_moe_active_params():
+    g = get_config("granite-moe-3b-a800m")
+    assert g.active_param_count() < g.param_count()
+    assert g.moe.n_experts == 40 and g.moe.top_k == 8
+    l4 = get_config("llama4-scout-17b-a16e")
+    assert l4.moe.n_experts == 16 and l4.moe.top_k == 1
+    assert 9e9 < l4.active_param_count() < 13e9
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED_ARCHS))
+def test_reduced_configs(name):
+    cfg = get_config(name).reduced()
+    assert cfg.family == get_config(name).family
+    assert cfg.d_model <= 64 and cfg.vocab_size <= 128
+    assert cfg.param_count() < 5e6
+
+
+def test_shapes():
+    assert SHAPES["train_4k"].tokens_per_step == 4096 * 256
+    assert SHAPES["decode_32k"].tokens_per_step == 128  # one token per seq
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["prefill_32k"].kind == "prefill"
+
+
+def test_long_context_applicability():
+    runs = [n for n in ASSIGNED_ARCHS
+            if shape_applicable(get_config(n), SHAPES["long_500k"])[0]]
+    assert sorted(runs) == ["falcon-mamba-7b", "zamba2-7b"]
+
+
+def test_input_specs_modalities():
+    vl = input_specs(get_config("qwen2-vl-72b"), SHAPES["train_4k"])
+    assert vl["frontend_embeds"].shape == (256, 256, 8192)
+    assert vl["mrope_pos"].shape == (3, 256, 4096)
+    au = input_specs(get_config("musicgen-medium"), SHAPES["prefill_32k"])
+    assert au["frontend_embeds"].shape[1] == 64
+    de = input_specs(get_config("yi-34b"), SHAPES["decode_32k"])
+    assert de["tokens"].shape == (128, 1)
+    assert de["position"].shape == (128,)
+    assert de["tokens"].dtype == jnp.int32

@@ -1,0 +1,175 @@
+"""Hydra core units: partitioner, scheduler, simulator, trials."""
+import dataclasses
+
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.core import simulator as sim
+from repro.core.partitioner import (balance_report, partition_costs,
+                                    plan_stages)
+from repro.core.pipeline import EngineConfig
+from repro.core.scheduler import (TrialSpec, max_concurrent_trials,
+                                  per_chip_bytes, plan_gangs,
+                                  replan_after_failure)
+from repro.core.trials import SuccessiveHalving, TrialResult, grid_search, \
+    random_search
+
+
+BASE_ENG = EngineConfig(n_trials=1, n_microbatches=16, microbatch=1,
+                        n_stages=16, data_size=16, fsdp=True)
+
+
+# --------------------------------------------------------------------------
+# partitioner
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED_ARCHS))
+def test_plan_stages_covers_all_layers(name):
+    cfg = get_config(name)
+    plan = plan_stages(cfg, 16)
+    assert plan.padded_layers >= cfg.n_layers
+    assert plan.padded_layers == 16 * plan.layers_per_stage
+    total = sum(plan.real_layers_in_stage(s) for s in range(16))
+    assert total == cfg.n_layers
+    rep = balance_report(cfg, plan, 4096)
+    # padding never worsens the tick bottleneck (max stage load)
+    assert rep["imbalance"] <= plan.layers_per_stage
+
+
+def test_partition_costs_dp_optimal():
+    costs = [5, 1, 1, 1, 5, 1, 1, 1]
+    starts = partition_costs(costs, 3)
+    # reconstruct part sums
+    bounds = starts + [len(costs)]
+    parts = [sum(costs[bounds[i]:bounds[i + 1]]) for i in range(3)]
+    assert max(parts) == 7  # optimal for this instance ([5,1],[1,1,5],[1,1,1])
+    assert sum(parts) == sum(costs)
+
+
+def test_partition_costs_matches_bruteforce():
+    import itertools
+    costs = [3, 1, 4, 1, 5, 9, 2, 6]
+    k = 3
+
+    def brute():
+        best = float("inf")
+        n = len(costs)
+        for cuts in itertools.combinations(range(1, n), k - 1):
+            b = (0,) + cuts + (n,)
+            best = min(best, max(sum(costs[b[i]:b[i + 1]])
+                                 for i in range(k)))
+        return best
+
+    starts = partition_costs(costs, k)
+    bounds = starts + [len(costs)]
+    got = max(sum(costs[bounds[i]:bounds[i + 1]]) for i in range(k))
+    assert got == brute()
+
+
+# --------------------------------------------------------------------------
+# scheduler
+# --------------------------------------------------------------------------
+
+
+def test_capacity_planner_monotone_in_model_size():
+    small = max_concurrent_trials(get_config("granite-moe-3b-a800m"),
+                                  BASE_ENG, 4096)
+    big = max_concurrent_trials(get_config("deepseek-67b"), BASE_ENG, 4096)
+    assert small >= big >= 1
+
+
+def test_memory_model_fsdp_shrinks_params():
+    cfg = get_config("deepseek-67b")
+    with_f = per_chip_bytes(cfg, BASE_ENG, 4096, train=True)
+    without = per_chip_bytes(cfg, dataclasses.replace(BASE_ENG, fsdp=False),
+                             4096, train=True)
+    assert with_f.params_bytes < without.params_bytes
+
+
+def test_gang_planning_covers_all_trials_and_bubble():
+    trials = grid_search("chatglm3-6b", [1e-3, 3e-4], [0.0, 0.1], [0, 1])
+    gangs = plan_gangs(trials, BASE_ENG, {"chatglm3-6b":
+                                          get_config("chatglm3-6b")}, 4096)
+    planned = [t for g in gangs for t in g.trials]
+    assert sorted(t.tag for t in planned) == sorted(t.tag for t in trials)
+    for g in gangs:
+        assert g.engine.n_trials == len(g.trials)
+
+
+def test_replan_after_failure_shrinks_data_axis():
+    trials = grid_search("chatglm3-6b", [1e-3, 3e-4])
+    cfgs = {"chatglm3-6b": get_config("chatglm3-6b")}
+    gangs = plan_gangs(trials, BASE_ENG, cfgs, 4096)
+    new = replan_after_failure(gangs, BASE_ENG, cfgs, 4096,
+                               lost_data_rows=2)
+    assert all(g.engine.data_size == 14 for g in new)
+    assert sum(len(g.trials) for g in new) == len(trials)
+    with pytest.raises(RuntimeError):
+        replan_after_failure(gangs, BASE_ENG, cfgs, 4096, lost_data_rows=16)
+
+
+# --------------------------------------------------------------------------
+# simulator (the paper's Fig. 2)
+# --------------------------------------------------------------------------
+
+
+def test_traditional_model_parallel_utilization_is_1_over_s():
+    for s in (4, 8):
+        r = sim.simulate_model_parallel(2, s, n_microbatches=4)
+        assert abs(r.utilization - 1.0 / s) < 1e-6
+
+
+def test_shard_parallel_beats_model_parallel():
+    for k in (2, 4, 8):
+        sp = sim.simulate_shard_parallel(k, 8, 16)
+        mp = sim.simulate_model_parallel(k, 8, 16)
+        gp = sim.simulate_model_parallel(k, 8, 16, pipelined=True)
+        assert sp.makespan < mp.makespan
+        assert sp.makespan <= gp.makespan + 1e-9
+
+
+def test_shard_parallel_utilization_increases_with_models():
+    utils = [sim.simulate_shard_parallel(k, 8, 16).utilization
+             for k in (1, 2, 4, 8)]
+    assert all(b > a for a, b in zip(utils, utils[1:]))
+    assert utils[-1] > 0.9  # paper D1: utilization -> 1
+
+
+def test_closed_form_matches_simulator():
+    for k, s, m in [(2, 4, 3), (4, 8, 2), (1, 16, 16)]:
+        got = sim.simulate_shard_parallel(k, s, m).makespan
+        want = sim.theoretical_shard_parallel_makespan(k, s, m)
+        assert abs(got - want) < 1e-9, (k, s, m, got, want)
+
+
+def test_figure2_table_speedups():
+    rows = sim.figure2_table(n_shards=8, n_models_list=(4, 8))
+    for r in rows:
+        assert r["speedup_vs_model_parallel"] > 2.0  # vs paper Fig. 1 regime
+        assert 0 < r["shard_util"] <= 1
+
+
+# --------------------------------------------------------------------------
+# trials / successive halving
+# --------------------------------------------------------------------------
+
+
+def test_grid_and_random_search_sizes():
+    assert len(grid_search("a", [1, 2], [0.1], [0, 1])) == 4
+    assert len(random_search("a", 7)) == 7
+
+
+def test_successive_halving_selects_best():
+    trials = grid_search("a", [1e-2, 3e-3, 1e-3, 3e-4])
+
+    def fake_train(specs, n_steps):
+        # quality improves with more steps; lr=1e-3 is secretly the best
+        return [TrialResult(s, n_steps,
+                            train_loss=abs(s.lr - 1e-3) + 1.0 / n_steps,
+                            val_loss=abs(s.lr - 1e-3) + 1.0 / n_steps)
+                for s in specs]
+
+    best = SuccessiveHalving(base_steps=10, eta=2, max_rungs=3).run(
+        trials, fake_train)
+    assert best.spec.lr == 1e-3

@@ -1,0 +1,48 @@
+"""Pallas flash-attention kernel vs ref.py oracle: shape/dtype sweep in
+interpret mode (kernel body executed on CPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.models.layers import repeat_kv
+
+RNG = np.random.default_rng(1)
+
+SWEEP = [
+    # b, sq, sk, hq, hkv, hd, causal, window, off, dtype
+    (1, 64, 64, 4, 2, 16, True, 0, 0, jnp.float32),
+    (2, 33, 33, 4, 4, 32, True, 0, 0, jnp.float32),
+    (1, 128, 128, 8, 2, 16, True, 24, 0, jnp.float32),
+    (1, 16, 48, 4, 1, 16, True, 0, 32, jnp.float32),
+    (2, 40, 40, 4, 2, 16, False, 0, 0, jnp.bfloat16),
+    (1, 72, 72, 2, 2, 64, True, 0, 0, jnp.bfloat16),
+    (1, 8, 8, 1, 1, 8, True, 0, 0, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("b,sq,sk,hq,hkv,hd,causal,window,off,dt", SWEEP)
+def test_flash_vs_ref(b, sq, sk, hq, hkv, hd, causal, window, off, dt):
+    q = jnp.asarray(RNG.normal(size=(b, sq, hq, hd)), dt)
+    k = jnp.asarray(RNG.normal(size=(b, sk, hkv, hd)), dt)
+    v = jnp.asarray(RNG.normal(size=(b, sk, hkv, hd)), dt)
+    g = hq // hkv
+    r = ref.flash_attention_ref(q, repeat_kv(k, g), repeat_kv(v, g),
+                                causal=causal, window=window, kv_offset=off)
+    o = ops.flash_attention(q, k, v, causal=causal, window=window,
+                            kv_offset=off, block_q=16, block_k=16)
+    tol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    err = float(jnp.max(jnp.abs(r.astype(jnp.float32)
+                                - o.astype(jnp.float32))))
+    assert err < tol, err
+
+
+def test_flash_block_size_invariance():
+    q = jnp.asarray(RNG.normal(size=(1, 96, 4, 16)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 96, 2, 16)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 96, 2, 16)), jnp.float32)
+    outs = [ops.flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+            for bq, bk in [(16, 16), (32, 16), (16, 32), (96, 96)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=2e-5)

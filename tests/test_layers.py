@@ -1,0 +1,194 @@
+"""Layer numerics: chunked attention vs direct oracle, Mamba1/Mamba2 chunked
+forms vs step-by-step recurrence, RoPE variants, MoE dispatch conservation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models import layers as L
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(*shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+@pytest.mark.parametrize("sq,sk,causal,window,off,gqa", [
+    (64, 64, True, 0, 0, 1),
+    (33, 33, True, 0, 0, 2),
+    (7, 39, True, 0, 32, 4),
+    (16, 16, False, 0, 0, 1),
+    (64, 64, True, 24, 0, 2),
+])
+def test_chunked_attention_matches_reference(sq, sk, causal, window, off, gqa):
+    b, hkv, hd = 2, 2, 16
+    q = _rand(b, sq, hkv * gqa, hd)
+    k = _rand(b, sk, hkv, hd)
+    v = _rand(b, sk, hkv, hd)
+    kv_len = jnp.array([sk, max(sk - 5, 1)])
+    ref = L.attention_reference(q, k, v, causal=causal, window=window,
+                                kv_offset=off, kv_len=kv_len)
+    out = L.chunked_attention(q, k, v, causal=causal, window=window,
+                              kv_offset=off, kv_len=kv_len,
+                              q_chunk=16, kv_chunk=8)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                               atol=3e-5, rtol=1e-4)
+
+
+def test_attention_grads_flow_through_chunks():
+    q = _rand(1, 40, 4, 16)
+    k = _rand(1, 40, 2, 16)
+    v = _rand(1, 40, 2, 16)
+
+    def f(q, k, v):
+        return L.chunked_attention(q, k, v, causal=True, q_chunk=16,
+                                   kv_chunk=8).sum()
+
+    g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    for x in g:
+        assert jnp.all(jnp.isfinite(x))
+        assert float(jnp.abs(x).max()) > 0
+
+
+def _mamba1_cfg():
+    return ArchConfig(
+        name="m1", family="ssm", n_layers=2, d_model=32, n_heads=0,
+        n_kv_heads=0, d_ff=0, vocab_size=64, rope="none",
+        ssm=SSMConfig(kind="mamba1", d_state=8, d_conv=4, expand=2,
+                      dt_rank=4, chunk_size=8))
+
+
+def _mamba1_params(di=64, n=8, r=4, d=32):
+    return {
+        "in_proj": _rand(d, 2 * di, scale=0.1),
+        "conv_w": _rand(di, 4, scale=0.3),
+        "conv_b": jnp.zeros((di,)),
+        "x_proj": _rand(di, r + 2 * n, scale=0.1),
+        "dt_proj": _rand(r, di, scale=0.3),
+        "dt_bias": jnp.zeros((di,)),
+        "A_log": _rand(di, n, scale=0.1),
+        "D": jnp.ones((di,)),
+        "out_proj": _rand(di, d, scale=0.1),
+    }
+
+
+def test_mamba1_chunked_equals_step_decode():
+    cfg = _mamba1_cfg()
+    p = _mamba1_params()
+    x = _rand(2, 21, 32)
+    y, hs, cs = L.mamba1_mix(p, x, cfg)
+    h, c = None, jnp.zeros((2, 3, 64))
+    ys = []
+    for t in range(21):
+        yt, h, c = L.mamba1_mix(p, x[:, t:t + 1], cfg, h, c)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(jnp.concatenate(ys, 1)), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(h), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cs), np.asarray(c), atol=1e-5)
+
+
+def test_mamba2_ssd_equals_step_decode():
+    cfg = ArchConfig(
+        name="m2", family="hybrid", n_layers=2, d_model=32, n_heads=4,
+        n_kv_heads=4, d_ff=64, vocab_size=64, rope="1d", head_dim=8,
+        ssm=SSMConfig(kind="mamba2", d_state=8, d_conv=4, expand=2,
+                      head_dim=16, n_groups=2, chunk_size=8))
+    di, n, g, nh = 64, 8, 2, 4
+    conv_dim = di + 2 * g * n
+    p = {
+        "in_proj": _rand(32, 2 * di + 2 * g * n + nh, scale=0.1),
+        "conv_w": _rand(conv_dim, 4, scale=0.3),
+        "conv_b": jnp.zeros((conv_dim,)),
+        "dt_bias": jnp.zeros((nh,)),
+        "A_log": _rand(nh, scale=0.1),
+        "D": jnp.ones((nh,)),
+        "norm_w": jnp.ones((di,)),
+        "out_proj": _rand(di, 32, scale=0.1),
+    }
+    x = _rand(2, 21, 32)
+    y, hs, _ = L.mamba2_mix(p, x, cfg)
+    h, c = None, jnp.zeros((2, 3, conv_dim))
+    ys = []
+    for t in range(21):
+        yt, h, c = L.mamba2_mix(p, x[:, t:t + 1], cfg, h, c)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(jnp.concatenate(ys, 1)), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(h), atol=1e-4)
+
+
+@pytest.mark.parametrize("rope", ["1d", "2d", "mrope"])
+def test_rope_orthogonality(rope):
+    """Rotary application preserves vector norms (rotation property)."""
+    cfg = ArchConfig(name="r", family="dense", n_layers=1, d_model=64,
+                     n_heads=4, n_kv_heads=4, d_ff=64, vocab_size=32,
+                     rope=rope, head_dim=16)
+    x = _rand(2, 8, 4, 16)
+    if rope == "mrope":
+        pos = jnp.broadcast_to(jnp.arange(8), (3, 2, 8))
+    else:
+        pos = jnp.broadcast_to(jnp.arange(8), (2, 8))
+    y = L.apply_rope(x, pos, cfg)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               rtol=1e-5)
+
+
+def test_rope_relative_position_property():
+    """1d RoPE: <q_m, k_n> depends only on (m - n)."""
+    cfg = ArchConfig(name="r", family="dense", n_layers=1, d_model=64,
+                     n_heads=1, n_kv_heads=1, d_ff=64, vocab_size=32,
+                     rope="1d", head_dim=16)
+    q = _rand(1, 1, 1, 16)
+    k = _rand(1, 1, 1, 16)
+
+    def dot_at(m, n):
+        qm = L.apply_rope(q, jnp.array([[m]]), cfg)
+        kn = L.apply_rope(k, jnp.array([[n]]), cfg)
+        return float(jnp.sum(qm * kn))
+
+    assert abs(dot_at(5, 3) - dot_at(10, 8)) < 1e-4
+    assert abs(dot_at(7, 0) - dot_at(17, 10)) < 1e-4
+
+
+def test_moe_dropless_equals_dense_mixture():
+    """With capacity >= all tokens, scatter-dispatch MoE must equal the dense
+    gate-weighted mixture of expert outputs."""
+    d, e, f, t = 16, 4, 8, 24
+    p = {"router": _rand(d, e, scale=0.5),
+         "w_gate": _rand(e, d, f, scale=0.3),
+         "w_up": _rand(e, d, f, scale=0.3),
+         "w_down": _rand(e, f, d, scale=0.3)}
+    x = _rand(2, 12, d)
+    out, aux = L.moe_apply(p, x, n_experts=e, top_k=2, capacity_factor=64.0,
+                           act="swiglu")
+    # dense oracle
+    logits = jnp.einsum("bsd,de->bse", x, p["router"])
+    probs = jax.nn.softmax(logits, -1)
+    gv, gi = jax.lax.top_k(probs, 2)
+    gv = gv / gv.sum(-1, keepdims=True)
+    dense = jnp.zeros_like(x)
+    for ei in range(e):
+        g_ = jnp.einsum("bsd,df->bsf", x, p["w_gate"][ei])
+        u_ = jnp.einsum("bsd,df->bsf", x, p["w_up"][ei])
+        ye = jnp.einsum("bsf,fd->bsd", jax.nn.silu(g_) * u_, p["w_down"][ei])
+        w = jnp.where(gi == ei, gv, 0.0).sum(-1)
+        dense += ye * w[..., None]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense), atol=2e-5)
+    assert float(aux) > 0
+
+
+def test_moe_expert_chunking_matches_unchunked():
+    d, e, f = 16, 8, 8
+    p = {"router": _rand(d, e, scale=0.5),
+         "w_gate": _rand(e, d, f, scale=0.3),
+         "w_up": _rand(e, d, f, scale=0.3),
+         "w_down": _rand(e, f, d, scale=0.3)}
+    x = _rand(2, 12, d)
+    o1, _ = L.moe_apply(p, x, n_experts=e, top_k=2, capacity_factor=2.0)
+    o2, _ = L.moe_apply(p, x, n_experts=e, top_k=2, capacity_factor=2.0,
+                        expert_chunk=2)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)

@@ -1,0 +1,116 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import simulator as sim
+from repro.core.partitioner import partition_costs
+from repro.core.pipeline import EngineConfig
+from repro.models import layers as L
+from repro.models import lm
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_layers=st.integers(1, 200), n_stages=st.integers(1, 32))
+def test_stage_plan_partition_invariants(n_layers, n_stages):
+    from repro.configs import get_config
+    import dataclasses
+    cfg = dataclasses.replace(get_config("chatglm3-6b"), n_layers=n_layers)
+    from repro.core.partitioner import plan_stages
+    plan = plan_stages(cfg, n_stages)
+    # every real layer is owned by exactly one stage; padding only at the end
+    owned = sum(plan.real_layers_in_stage(s) for s in range(n_stages))
+    assert owned == n_layers
+    assert 0 <= plan.pad_fraction < 1
+    assert plan.layers_per_stage * n_stages >= n_layers
+    assert (plan.layers_per_stage - 1) * n_stages < n_layers
+
+
+@settings(max_examples=25, deadline=None)
+@given(costs=st.lists(st.floats(0.1, 10), min_size=1, max_size=12),
+       k=st.integers(1, 5))
+def test_partition_costs_validity(costs, k):
+    starts = partition_costs(costs, k)
+    assert len(starts) == k
+    assert starts[0] == 0
+    assert all(a <= b for a, b in zip(starts, starts[1:]))
+    bounds = starts + [len(costs)]
+    got = max((sum(costs[bounds[i]:bounds[i + 1]]) for i in range(k)),
+              default=0)
+    # lower bounds of the optimum
+    assert got >= max(costs) - 1e-9 or got == 0
+    assert got >= sum(costs) / k - 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(1, 6), s=st.integers(2, 8), m=st.integers(1, 4))
+def test_simulator_work_conservation(k, s, m):
+    """Makespan x devices >= total work; utilization = work / (makespan·S)."""
+    r = sim.simulate_shard_parallel(k, s, m)
+    work = k * m * s * 3.0  # fwd 1 + bwd 2 per shard task
+    assert r.makespan * s >= work - 1e-9
+    np.testing.assert_allclose(r.utilization, work / (r.makespan * s),
+                               rtol=1e-9)
+    # closed form exactness
+    np.testing.assert_allclose(
+        r.makespan, sim.theoretical_shard_parallel_makespan(k, s, m),
+        rtol=1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_cross_entropy_shift_invariance(seed):
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(2, 3, 17)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 17, (2, 3)))
+    a = lm.cross_entropy(logits, labels)
+    b = lm.cross_entropy(logits + 123.0, labels)  # softmax shift invariance
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_rms_norm_scale_property(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, 5, 8)) + 0.1, jnp.float32)
+    y = L.rms_norm(x, jnp.ones((8,)))
+    # unit RMS output (up to eps)
+    rms = jnp.sqrt(jnp.mean(jnp.square(y), axis=-1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, atol=1e-2)
+    # scale equivariance: rms_norm(c*x) == rms_norm(x) for c > 0
+    y2 = L.rms_norm(x * 7.5, jnp.ones((8,)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(1, 4))
+def test_moe_capacity_monotonicity(seed, top_k):
+    """Raising capacity can only reduce dropped tokens: with max capacity the
+    output equals the dropless mixture; lower capacities stay finite."""
+    rng = np.random.default_rng(seed)
+    d, e = 8, 4
+    p = {"router": jnp.asarray(rng.normal(size=(d, e)), jnp.float32),
+         "w_gate": jnp.asarray(rng.normal(size=(e, d, 8)) * .3, jnp.float32),
+         "w_up": jnp.asarray(rng.normal(size=(e, d, 8)) * .3, jnp.float32),
+         "w_down": jnp.asarray(rng.normal(size=(e, 8, d)) * .3, jnp.float32)}
+    x = jnp.asarray(rng.normal(size=(1, 10, d)), jnp.float32)
+    lo, _ = L.moe_apply(p, x, n_experts=e, top_k=top_k, capacity_factor=0.5)
+    hi, _ = L.moe_apply(p, x, n_experts=e, top_k=top_k, capacity_factor=99.0)
+    assert jnp.all(jnp.isfinite(lo)) and jnp.all(jnp.isfinite(hi))
+    # dropped-token rows fall back to zero update; norm(lo) <= norm(hi)+tol
+    assert float(jnp.linalg.norm(lo)) <= float(jnp.linalg.norm(hi)) + 1e-3
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 5), st.integers(1, 3), st.integers(1, 3))
+def test_engine_bubble_fraction(s, k, m):
+    eng = EngineConfig(n_trials=k, n_microbatches=m, microbatch=1,
+                       n_stages=s, data_size=1)
+    assert eng.n_ticks == k * m + s - 1
+    np.testing.assert_allclose(eng.bubble_fraction,
+                               (s - 1) / (k * m + s - 1))
+    # the paper's claim: more trials => smaller bubble
+    eng2 = EngineConfig(n_trials=k + 1, n_microbatches=m, microbatch=1,
+                        n_stages=s, data_size=1)
+    assert eng2.bubble_fraction < eng.bubble_fraction
