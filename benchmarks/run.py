@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV:
   bert_memory/* paper §4.2 (per-device memory reduction, BERT-Large, 4-way)
   pipeline_throughput/* paper D2 (measured Hydra vs sequential MP wall time)
   exactness/*   paper D3 (pipelined == sequential training)
+  serve/*       continuous vs static batching (tok/s + slot occupancy)
   roofline/*    §Roofline terms per (arch × shape) from the dry-run artifacts
 """
 import json
@@ -14,13 +15,14 @@ import sys
 def main() -> None:
     sections = []
     from benchmarks import (bench_exactness, bench_memory, bench_pipeline,
-                            bench_utilization, roofline_table)
+                            bench_serve, bench_utilization, roofline_table)
     only = sys.argv[1] if len(sys.argv) > 1 else None
     all_benches = {
         "utilization": bench_utilization.run,
         "memory": bench_memory.run,
         "pipeline": bench_pipeline.run,
         "exactness": bench_exactness.run,
+        "serve": bench_serve.run,
         "roofline": roofline_table.run,
     }
     print("name,us_per_call,derived")

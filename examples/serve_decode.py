@@ -1,6 +1,6 @@
-"""Batched serving through the shard-parallel pipeline: prefill a batch of
-requests, then greedy-decode tokens step by step (the decode_32k cell's code
-path at toy scale).
+"""Serving through the shard-parallel pipeline: a dynamic request stream is
+continuously batched onto the pipeline's slots — slots recycle the round a
+request finishes (the decode_32k cell's code path at toy scale).
 
     PYTHONPATH=src python examples/serve_decode.py
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -15,9 +15,9 @@ from repro.launch import serve
 def main():
     # thin veneer over the production serving driver (same code path)
     argv = sys.argv[1:]
-    defaults = ["--arch", "musicgen-medium", "--smoke", "--batch", "4",
+    defaults = ["--arch", "chatglm3-6b", "--smoke", "--slots", "4",
                 "--prompt-len", "12", "--gen-len", "6"]
-    for flag in ("--arch", "--batch", "--prompt-len", "--gen-len"):
+    for flag in ("--arch", "--slots", "--prompt-len", "--gen-len"):
         if flag in argv:
             defaults = [d for i, d in enumerate(defaults)
                         if not (d == flag or (i > 0 and defaults[i - 1] == flag))]

@@ -1,0 +1,45 @@
+"""Version compatibility shims for the jax APIs the engine leans on.
+
+The deployment toolchain tracks recent jax (``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.make_mesh(axis_types=...)``); CI containers
+may pin an older release where shard_map still lives in
+``jax.experimental.shard_map`` (with ``check_rep`` instead of ``check_vma``)
+and meshes take no axis types. Route every use through here so the rest of
+the codebase is written against the modern surface only.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` with fallback to ``jax.experimental.shard_map``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def differentiable_optimization_barrier() -> bool:
+    """Whether ``lax.optimization_barrier`` has an AD rule in this release.
+
+    Old releases can't differentiate through the barrier, so perf pins that
+    sit on the gradient path (e.g. the FSDP gather hook) must drop it there.
+    """
+    from jax import lax
+    from jax.interpreters import ad
+    prim = getattr(lax, "optimization_barrier_p", None)
+    return prim is not None and prim in ad.primitive_jvps
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis types when the release supports them
+    (older releases have no axis_types concept — plain meshes behave the
+    same for our explicit shard_map programs)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(axis_type.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import shard_map
 from repro.configs.base import ArchConfig
 from repro.core import pipeline as pl
 from repro.core.partitioner import plan_stages
@@ -111,7 +112,7 @@ class HydraRunner:
                 loss_vec = jax.lax.pmean(loss_vec, ax)
             return loss_vec
 
-        fn = jax.jit(jax.shard_map(inner, mesh=self.mesh,
+        fn = jax.jit(shard_map(inner, mesh=self.mesh,
                                    in_specs=(pspecs, bspecs),
                                    out_specs=P(), check_vma=False))
         return np.asarray(fn(params, batch))

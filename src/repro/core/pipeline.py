@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+from repro.compat import shard_map
 from repro.configs.base import ArchConfig
 from repro.core.partitioner import StagePlan, plan_stages
 from repro.models import blocks as BLK
@@ -301,6 +303,7 @@ def make_layer_gather(cfg: ArchConfig, eng: EngineConfig):
     if not eng.fsdp:
         return None
     specs = param_pspecs(cfg, eng)["layers"]
+    use_barrier = compat.differentiable_optimization_barrier()
 
     def gather(p_layer):
         def one(spec, leaf):
@@ -313,8 +316,12 @@ def make_layer_gather(cfg: ArchConfig, eng: EngineConfig):
                     # pin the gather to the param dtype: without the barrier
                     # XLA commutes downstream fp32 converts across the gather
                     # (2× ICI traffic and full-leaf fp32 temps — see the
-                    # buffer-dump analysis in EXPERIMENTS.md §Perf)
-                    return lax.optimization_barrier(out)
+                    # buffer-dump analysis in EXPERIMENTS.md §Perf). Old jax
+                    # can't differentiate the barrier — drop the pin there
+                    # (correctness over the perf hint).
+                    if use_barrier:
+                        out = lax.optimization_barrier(out)
+                    return out
             return leaf
 
         return jax.tree.map(one, specs, p_layer,
@@ -527,7 +534,7 @@ def make_train_step(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
         metrics = {"loss": loss_vec, "grad_norm": gnorm}
         return params_new, opt_new, metrics
 
-    mapped = jax.shard_map(
+    mapped = shard_map(
         inner, mesh=mesh,
         in_specs=(pspecs, ospecs, bspecs, P(), P()),
         out_specs=(pspecs, ospecs, {"loss": P(), "grad_norm": P()}),
@@ -652,6 +659,13 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
     sequence against the live cache.
     prefill: batch = {tokens (K,M,mb,seq)} (+ frontend extras); fills the
     cache and emits the first generated token.
+    append: batch = {tokens (K,M,mb,qlen), positions (K,M,mb)}; inserts qlen
+    tokens per row starting at the row's own cache depth ``positions`` —
+    the continuous-batching admission path (chunked prefill of new requests
+    into recycled slots, per-row ragged offsets).
+    All modes accept an optional ``batch["active"]`` (K,M,mb) bool row mask:
+    inactive rows compute (SPMD shapes are static) but their cache rows are
+    left untouched, so idle slots can ride along in a live batch.
     Returns (new_cache, tokens_out (K,M,mb), logit_max (K,M,mb)).
     """
     S = eng.n_stages
@@ -669,16 +683,24 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
     cdt = opts.compute_dtype
     nc = eng.prefill_chunks if (mode == "prefill"
                                 and eng.prefill_chunks > 1) else 1
-    stack_mode = "append" if nc > 1 else mode
+    stack_mode = "append" if (nc > 1 or mode == "append") else mode
+    active = batch.get("active")
 
     def chunk_of(m):
         return m % nc if nc > 1 else jnp.zeros((), jnp.int32)
+
+    def slot_rows_active(k, m):
+        if active is None:
+            return None
+        return _take2({"a": active}, k, m)["a"]  # (mb,) bool
 
     def embed_slot(slot):
         k, m = _slot_ids(eng, slot)
         tok = _take2({"t": tokens}, k, m)["t"]
         if mode == "decode":
             pos = _take2({"p": batch["positions"]}, k, m)["p"][:, None]
+        elif mode == "append":
+            pos = slot_pos(slot)  # (mb, qlen) per-row absolute positions
         else:
             pos = chunk_of(m) * qlen + jnp.broadcast_to(
                 jnp.arange(qlen), (mb, qlen))
@@ -687,7 +709,7 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
             x = vp_embed(cfg, eng, emb_k, tok, pos, cdt)
         else:
             x = plain_embed(cfg, eng, emb_k, tok, pos, cdt)
-        if mode != "decode" and "frontend_embeds" in batch:
+        if mode == "prefill" and "frontend_embeds" in batch:
             fe = _take2({"f": batch["frontend_embeds"]}, k, m)["f"]
             x = x.at[:, :fe.shape[1]].set(fe.astype(x.dtype))
         return x
@@ -699,6 +721,9 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
             if cfg.rope == "mrope":
                 return jnp.broadcast_to(p, (3, mb, 1))
             return p
+        if mode == "append":
+            start = _take2({"p": batch["positions"]}, k, m)["p"]
+            return start[:, None] + jnp.arange(qlen)[None, :]
         if cfg.rope == "mrope":
             return _take2({"p": batch["mrope_pos"]}, k, m)["p"]
         return chunk_of(m) * qlen + jnp.broadcast_to(
@@ -716,14 +741,19 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
             sh = _take2(cache["shared"], k, g)
         return {"layers": lay, "shared": sh}
 
-    def put_cache(cache, k, m, new_slice, valid):
+    def put_cache(cache, k, m, new_slice, valid, row_mask=None):
         m = m // nc if nc > 1 else m
 
         def upd(buf, new):
             old = lax.dynamic_index_in_dim(
                 lax.dynamic_index_in_dim(buf, k, 0, keepdims=False),
                 m, 0, keepdims=False)
-            val = jnp.where(valid, new.astype(buf.dtype), old)
+            keep = valid
+            if row_mask is not None:
+                # cache slices are (L_s|sites, mb, ...): rows live on axis 1
+                keep = (valid & row_mask).reshape(
+                    (1, row_mask.shape[0]) + (1,) * (new.ndim - 2))
+            val = jnp.where(keep, new.astype(buf.dtype), old)
             return lax.dynamic_update_slice(
                 buf, val[None, None],
                 (k, m) + (0,) * (buf.ndim - 2))
@@ -757,7 +787,7 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
             shared = (_take1(params["shared"], k_cur)
                       if "shared" in params else None)
             kv_off = None
-            if mode == "decode":
+            if mode in ("decode", "append"):
                 kv_off = _take2({"p": batch["positions"]}, k_cur, m_cur)["p"]
             elif nc > 1:
                 kv_off = jnp.full((mb,), chunk_of(m_cur) * qlen, jnp.int32)
@@ -768,7 +798,8 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
                 layer_mask=layer_mask, layer_offset=layer_offset,
                 kv_offset=kv_off, window=eng.window,
                 layer_param_fn=gather_fn)
-            return y, put_cache(cache, k_cur, m_cur, c_new, valid_cur)
+            return y, put_cache(cache, k_cur, m_cur, c_new, valid_cur,
+                                slot_rows_active(k_cur, m_cur))
 
         if eng.skip_bubbles:
             y, cache = lax.cond(valid_cur, run_stage,
@@ -819,25 +850,39 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
 
 
 def make_serve_step(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
-                    mesh, mode: str, jit: bool = True) -> Callable:
-    """Builds the jitted pipelined serving step (``mode``: prefill|decode).
+                    mesh, mode: str, jit: bool = True,
+                    with_active: bool = False) -> Callable:
+    """Builds the jitted pipelined serving step.
 
+    ``mode``: prefill | decode | append. ``append`` is the continuous-batching
+    admission step: qlen tokens per row inserted at per-row cache depths
+    (batch carries ``positions`` start offsets). ``with_active=True`` adds a
+    (K,M,mb) bool ``active`` row mask to the batch: inactive rows never touch
+    their cache (the serve engine uses it to let idle/decoding slots ride
+    along during admission and vice versa).
     Returns fn(params, cache, batch) -> (new_cache, tokens, logit_max).
     """
+    if mode == "append" and cfg.rope == "mrope":
+        raise ValueError("append mode (continuous batching) does not support "
+                         "mrope archs; use the static prefill path")
     pspecs = param_pspecs(cfg, eng)
     bspecs = batch_pspecs(cfg, eng, train=False)
     if mode == "prefill":
         bspecs.pop("positions", None)
-    else:  # decode consumes plain tokens; modality prefixes live in the cache
+    else:  # decode/append consume plain tokens; modality prefixes live in
+        # the cache (written by a static prefill)
         bspecs.pop("frontend_embeds", None)
         bspecs.pop("mrope_pos", None)
+    if with_active:
+        bspecs["active"] = P(None, None,
+                             None if eng.batch_replicated else eng.dp_axes)
     cspecs = serve_cache_pspecs(cfg, eng)
     batch_ax = P() if eng.batch_replicated else P(None, None, eng.dp_axes)
 
     def inner(params, cache, batch):
         return pipeline_serve(cfg, opts, eng, params, cache, batch, mode)
 
-    mapped = jax.shard_map(
+    mapped = shard_map(
         inner, mesh=mesh,
         in_specs=(pspecs, cspecs, bspecs),
         out_specs=(cspecs, batch_ax, batch_ax),
@@ -845,6 +890,35 @@ def make_serve_step(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
     if not jit:
         return mapped
     return jax.jit(mapped, donate_argnums=(1,))
+
+
+def make_slot_reset(cfg: ArchConfig, eng: EngineConfig, mesh,
+                    jit: bool = True) -> Callable:
+    """Builds fn(cache, mask) zeroing the cache rows of recycled slots.
+
+    ``mask``: (K, cache_groups, mb_global) bool — True rows are cleared the
+    tick their request finishes, before a queued request is admitted into the
+    freed slot. KV rows beyond kv_len are never attended, but SSM/conv states
+    are recurrent and MUST restart from zero for the next request.
+    """
+    cspecs = serve_cache_pspecs(cfg, eng)
+    mspec = P(None, None, None if eng.batch_replicated else eng.dp_axes)
+
+    def inner(cache, mask):
+        def zero(buf):
+            mk = mask.reshape(mask.shape[:2] + (1, mask.shape[2])
+                              + (1,) * (buf.ndim - 4))
+            return jnp.where(mk, jnp.zeros((), buf.dtype), buf)
+
+        return {"layers": jax.tree.map(zero, cache["layers"]),
+                "shared": (jax.tree.map(zero, cache["shared"])
+                           if cache["shared"] is not None else None)}
+
+    mapped = shard_map(inner, mesh=mesh, in_specs=(cspecs, mspec),
+                           out_specs=cspecs, check_vma=False)
+    if not jit:
+        return mapped
+    return jax.jit(mapped, donate_argnums=(0,))
 
 
 def batch_pspecs(cfg: ArchConfig, eng: EngineConfig, train: bool):

@@ -114,6 +114,38 @@ def max_concurrent_trials(cfg: ArchConfig, eng: EngineConfig, seq_len: int,
 
 
 # ---------------------------------------------------------------------------
+# Serving capacity planning (continuous-batching engine)
+# ---------------------------------------------------------------------------
+
+
+def plan_serve_capacity(cfg: ArchConfig, base_eng: EngineConfig,
+                        max_seq: int, target_bubble: float = 0.25,
+                        max_slots: int = 64) -> EngineConfig:
+    """Choose the serving slot count M (``n_microbatches``) for one model.
+
+    Serving is forward-only, so ``per_chip_bytes(train=False)`` applies: the
+    KV/SSM cache at ``max_seq`` is the marginal HBM cost per slot. Start from
+    the pipeline-bubble target ((S-1)/(M+S-1) <= target with K=1 — more slots
+    = more concurrent requests = smaller bubble, Hydra's slot-filling insight
+    applied to serving), then shrink M until the cache fits the budget.
+    """
+    s = base_eng.n_stages
+    if s > 1:
+        m_bubble = math.ceil((s - 1) * (1.0 - target_bubble)
+                             / max(target_bubble, 1e-9))
+    else:
+        m_bubble = 1
+    m = min(max(m_bubble, base_eng.n_microbatches, 1), max_slots)
+    eng = dataclasses.replace(base_eng, n_trials=1, n_microbatches=m,
+                              max_seq=max_seq)
+    budget = HBM_BYTES_PER_CHIP * HBM_BUDGET_FRACTION
+    while (per_chip_bytes(cfg, eng, max_seq, train=False).total > budget
+           and eng.n_microbatches > 1):
+        eng = dataclasses.replace(eng, n_microbatches=eng.n_microbatches - 1)
+    return eng
+
+
+# ---------------------------------------------------------------------------
 # Gang planning
 # ---------------------------------------------------------------------------
 

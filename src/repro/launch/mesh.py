@@ -6,7 +6,7 @@ XLA_FLAGS before any jax initialization.
 """
 from __future__ import annotations
 
-import jax
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -14,19 +14,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     2×16×16 (pod × data × model). 'model' is Hydra's pipeline-stage axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(n_data: int = 2, n_model: int = 4, multi_pod: bool = False):
     """Small mesh for CPU integration tests (fake host devices)."""
     if multi_pod:
-        return jax.make_mesh(
-            (2, n_data, n_model), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh(
-        (n_data, n_model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return make_mesh((2, n_data, n_model), ("pod", "data", "model"))
+    return make_mesh((n_data, n_model), ("data", "model"))
 
 
 def mesh_axis_sizes(mesh) -> dict:

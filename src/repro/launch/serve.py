@@ -1,81 +1,146 @@
-"""Serving driver: pipelined prefill + batched greedy decode.
+"""Serving driver: continuous-batching engine over the Hydra pipeline.
+
+Default mode streams a dynamic request trace (Poisson arrivals or a JSONL
+replay) through :class:`repro.serve.ServeEngine` — slots are recycled the
+round a request finishes and queued requests are admitted via chunked
+prefill. ``--static`` runs the old lockstep baseline on the same trace for
+comparison.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python -m repro.launch.serve --arch chatglm3-6b --smoke \
-        --n-data 2 --n-model 4 --prompt-len 16 --gen-len 8
+        --n-data 2 --n-model 4 --slots 3 --n-requests 12 --rate 2.0
+
+    # replay a recorded request stream
+    ... python -m repro.launch.serve --arch chatglm3-6b --smoke \
+        --trace /tmp/stream.jsonl
 """
 from __future__ import annotations
 
 import argparse
-import time
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import REGISTRY
+from repro.configs import get_config
 from repro.core import pipeline as pl
+from repro.core import scheduler as sched
 from repro.core.partitioner import plan_stages
 from repro.launch.mesh import make_test_mesh
 from repro.models.layers import ModelOptions
+from repro.serve import (Request, ServeEngine, load_trace, poisson_trace,
+                         static_serve)
 
 
-def main():
+def build_args():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="chatglm3-6b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--n-data", type=int, default=1)
     ap.add_argument("--n-model", type=int, default=1)
-    ap.add_argument("--batch", type=int, default=4,
-                    help="requests per data replica (pipeline slots)")
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen-len", type=int, default=8)
-    args = ap.parse_args()
+    ap.add_argument("--slots", type=int, default=0,
+                    help="microbatch slots M (0 = capacity-planned, capped "
+                    "by --max-slots)")
+    ap.add_argument("--max-slots", type=int, default=8)
+    ap.add_argument("--microbatch", type=int, default=1,
+                    help="requests per (slot × data replica)")
+    ap.add_argument("--prompt-len", type=int, default=16,
+                    help="max prompt length for the synthetic trace")
+    ap.add_argument("--gen-len", type=int, default=8,
+                    help="max generation budget for the synthetic trace")
+    ap.add_argument("--n-requests", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=1.0,
+                    help="Poisson arrivals per engine tick")
+    ap.add_argument("--trace", default="",
+                    help="JSONL request-stream to replay instead of the "
+                    "synthetic Poisson trace")
+    ap.add_argument("--prefill-chunks", type=int, default=2)
+    ap.add_argument("--static", action="store_true",
+                    help="run the lockstep static-batch baseline instead")
+    ap.add_argument("--seed", type=int, default=0)
+    return ap
 
+
+def main():
+    args = build_args().parse_args()
     mesh = make_test_mesh(args.n_data, args.n_model)
-    cfg = REGISTRY[args.arch]
+    cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.reduced()
     max_seq = args.prompt_len + args.gen_len
     opts = ModelOptions()
-    eng = pl.EngineConfig(
-        n_trials=1, n_microbatches=args.batch, microbatch=1,
-        n_stages=args.n_model, data_size=args.n_data,
-        max_seq=max_seq, cache_dtype=jnp.float32)
+    base = pl.EngineConfig(
+        n_trials=1, n_microbatches=max(args.slots, 1),
+        microbatch=args.microbatch, n_stages=args.n_model,
+        data_size=args.n_data, max_seq=max_seq, cache_dtype=jnp.float32,
+        prefill_chunks=args.prefill_chunks)
+    if args.slots <= 0:
+        planned = sched.plan_serve_capacity(cfg, base, max_seq)
+        slots = min(planned.n_microbatches, args.max_slots)
+        print(f"capacity plan: {planned.n_microbatches} slots fit the HBM "
+              f"budget; using {slots}")
+        base = dataclasses.replace(base, n_microbatches=slots)
+    eng = base
+
+    if args.trace:
+        requests = load_trace(args.trace)
+        too_long = [r.rid for r in requests if r.total_len > max_seq]
+        if too_long:
+            raise SystemExit(f"trace requests {too_long} exceed max_seq="
+                             f"{max_seq}; raise --prompt-len/--gen-len")
+        if args.static:
+            # fail before params/compile: lockstep groups need one length
+            n_cells = eng.n_microbatches * eng.microbatch * eng.data_size
+            for g0 in range(0, len(requests), n_cells):
+                plens = {r.prompt_len for r in requests[g0:g0 + n_cells]}
+                if len(plens) > 1:
+                    raise SystemExit(
+                        f"--static needs uniform prompt lengths per batch "
+                        f"group; group at {g0} has {sorted(plens)} — drop "
+                        f"--static or bucket the trace")
+    elif args.static:
+        # lockstep baseline needs uniform prompts; stagger the budgets
+        rng = np.random.default_rng(args.seed)
+        requests = [
+            Request(i, rng.integers(0, cfg.vocab_size,
+                                    (args.prompt_len,)).astype(np.int32),
+                    int(rng.integers(max(1, args.gen_len // 2),
+                                     args.gen_len + 1)))
+            for i in range(args.n_requests)]
+    else:
+        requests = poisson_trace(
+            args.n_requests, args.rate, cfg.vocab_size,
+            prompt_lens=(max(args.prompt_len // 2, 1), args.prompt_len),
+            gen_lens=(max(args.gen_len // 2, 1), args.gen_len),
+            seed=args.seed)
+
     plan = plan_stages(cfg, eng.n_stages)
-    key = jax.random.PRNGKey(0)
-    params = pl.init_trial_params(cfg, eng, plan, key, max_pos=max_seq)
+    params = pl.init_trial_params(cfg, eng, plan,
+                                  jax.random.PRNGKey(args.seed),
+                                  max_pos=max_seq)
 
-    prefill = pl.make_serve_step(cfg, opts, eng, mesh, "prefill")
-    decode = pl.make_serve_step(cfg, opts, eng, mesh, "decode")
+    if args.static:
+        completions, stats = static_serve(cfg, eng, mesh, params, requests,
+                                          opts)
+        mode = "static"
+    else:
+        engine = ServeEngine(cfg, eng, mesh, params, opts)
+        completions = engine.run(requests)
+        stats = engine.stats
+        mode = "continuous"
 
-    mbg = eng.microbatch * eng.data_size
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab_size,
-                           (1, args.batch, mbg, args.prompt_len),
-                           dtype=np.int32)
-    cache = pl.serve_cache_struct(cfg, eng, dry_run=False)
-
-    t0 = time.time()
-    batch = {"tokens": jnp.asarray(prompts)}
-    cache, tok, _ = prefill(params, cache, batch)
-    generated = [np.asarray(tok)]
-    pos = args.prompt_len
-    for step in range(args.gen_len - 1):
-        dbatch = {
-            "tokens": jnp.asarray(generated[-1][..., None]),
-            "positions": jnp.full((1, args.batch, mbg), pos, jnp.int32),
-        }
-        cache, tok, _ = decode(params, cache, dbatch)
-        generated.append(np.asarray(tok))
-        pos += 1
-    dt = time.time() - t0
-    gen = np.stack(generated, axis=-1)  # (1, M, mbg, gen_len)
-    print(f"prompt shape {prompts.shape} -> generated {gen.shape} "
-          f"in {dt:.2f}s ({gen.size / dt:.1f} tok/s on CPU)")
-    for r in range(min(3, mbg)):
-        print(f"  request[{r}]: ...{prompts[0, 0, r, -4:].tolist()} => "
-              f"{gen[0, 0, r].tolist()}")
+    for c in completions[:8]:
+        print(f"  req[{c.rid}] plen={c.prompt_len} queue={c.queue_ticks:.1f} "
+              f"latency={c.latency_ticks:.1f} generated {c.tokens}")
+    if len(completions) > 8:
+        print(f"  ... {len(completions) - 8} more")
+    s = stats.summary()
+    print(f"{mode}: {len(completions)} requests, "
+          f"{s['tokens_generated']} tokens generated in {s['ticks']} ticks "
+          f"({s['tokens_per_s']} tok/s on this host)")
+    print(f"slot occupancy {s['slot_occupancy']}, "
+          f"decode occupancy {s['decode_occupancy']}")
 
 
 if __name__ == "__main__":

@@ -60,8 +60,8 @@ def attn_apply(cfg: ArchConfig, opts: ModelOptions, p, x, *, pos,
     elif mode == "append":
         # chunked prefill: insert a whole chunk at kv_offset and attend over
         # the cache prefix + causally within the chunk (kv_offset handles the
-        # relative positions). kv_offset is per-row (b,) but uniform within a
-        # pipeline slot (chunk index × chunk length).
+        # relative positions). kv_offset is per-row (b,) — rows may sit at
+        # different cache depths (continuous-batching admission chunks).
         s_cache = cache["k"].shape[1]
 
         def updm(c, t, o):
@@ -71,11 +71,9 @@ def attn_apply(cfg: ArchConfig, opts: ModelOptions, p, x, *, pos,
             "v": jax.vmap(updm)(cache["v"], v, kv_offset),
         }
         kv_len = jnp.minimum(kv_offset + s, s_cache)
-        # offset is uniform within a slot — a traced scalar keeps the
-        # causal mask arithmetic broadcastable
         out = L.attention(
             q, new_cache["k"].astype(q.dtype), new_cache["v"].astype(q.dtype),
-            causal=True, window=window, kv_offset=kv_offset[0],
+            causal=True, window=window, kv_offset=kv_offset,
             kv_len=kv_len, opts=opts)
     elif mode == "decode":
         # ring-buffer insert: slot = kv_offset mod cache_len (identity for

@@ -151,8 +151,10 @@ def attention_reference(q, k, v, *, causal: bool, window: int = 0,
     per-layer saving for the 8:1 GQA archs at 32k decode).
 
     ``kv_offset`` is the absolute position of q[0] minus that of k[0] (for
-    decode, offset = cache length). ``kv_len`` optionally masks kv positions
-    >= kv_len (ragged cache). ``window`` > 0 restricts to a sliding window.
+    decode, offset = cache length); a scalar, or a (b,) array when rows sit at
+    different cache depths (ragged continuous-batching chunks). ``kv_len``
+    optionally masks kv positions >= kv_len (ragged cache). ``window`` > 0
+    restricts to a sliding window.
     """
     b, sq, hq, hd = q.shape
     sk, hkv = k.shape[1], k.shape[2]
@@ -160,16 +162,21 @@ def attention_reference(q, k, v, *, causal: bool, window: int = 0,
     qg = q.reshape(b, sq, hkv, g, hd)
     scale = 1.0 / math.sqrt(hd)
     scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
-    qpos = jnp.arange(sq)[:, None] + kv_offset
-    kpos = jnp.arange(sk)[None, :]
-    mask = jnp.ones((sq, sk), dtype=bool)
+    off = jnp.asarray(kv_offset)
+    if off.ndim == 0:
+        qpos = (jnp.arange(sq) + off)[None, :, None]  # (1, sq, 1)
+    else:
+        qpos = off[:, None, None] + jnp.arange(sq)[None, :, None]  # (b, sq, 1)
+    kpos = jnp.arange(sk)[None, None, :]  # (1, 1, sk)
+    mask = jnp.ones((qpos.shape[0], sq, sk), dtype=bool)
     if causal:
-        mask &= kpos <= qpos
+        mask = mask & (kpos <= qpos)
     if window > 0:
-        mask &= kpos > qpos - window
-    mask_b = jnp.broadcast_to(mask, (b, 1, 1, sq, sk))
+        mask = mask & (kpos > qpos - window)
+    mask_b = mask[:, None, None]  # (b|1, 1, 1, sq, sk)
     if kv_len is not None:
-        mask_b = mask_b & (kpos < kv_len[:, None, None, None, None])
+        mask_b = mask_b & (kpos[None, None]
+                           < kv_len[:, None, None, None, None])
     scores = jnp.where(mask_b, scores, -jnp.inf)
     probs = jax.nn.softmax(scores, axis=-1)
     probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
@@ -213,15 +220,20 @@ def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
             v_blk = lax.dynamic_slice_in_dim(vp, k_start, kv_chunk, axis=1)
             s = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
                            k_blk).astype(jnp.float32) * scale
-            qpos = q_start + jnp.arange(q_chunk)[:, None] + kv_offset
-            kpos = k_start + jnp.arange(kv_chunk)[None, :]
-            msk = jnp.ones((q_chunk, kv_chunk), bool)
+            off = jnp.asarray(kv_offset)
+            qrow = q_start + jnp.arange(q_chunk)
+            if off.ndim == 0:
+                qpos = (qrow + off)[None, :, None]  # (1, qc, 1)
+            else:
+                qpos = off[:, None, None] + qrow[None, :, None]  # (b, qc, 1)
+            kpos = (k_start + jnp.arange(kv_chunk))[None, None, :]
+            msk = jnp.ones((qpos.shape[0], q_chunk, kv_chunk), bool)
             if causal:
-                msk &= kpos <= qpos
+                msk = msk & (kpos <= qpos)
             if window > 0:
-                msk &= kpos > qpos - window
-            msk_b = msk[None, None, None] & (
-                kpos < kv_len[:, None, None, None, None])
+                msk = msk & (kpos > qpos - window)
+            msk_b = msk[:, None, None] & (
+                kpos[None, None] < kv_len[:, None, None, None, None])
             s = jnp.where(msk_b, s, -jnp.inf)
             m_new = jnp.maximum(m, s.max(axis=-1))
             # guard all -inf rows
@@ -258,7 +270,8 @@ def attention(q, k, v, *, causal: bool, window: int = 0, kv_offset: int = 0,
               kv_len=None, opts: ModelOptions):
     """Dispatch: Pallas flash kernel (TPU target) / jnp chunked / direct."""
     sq, sk = q.shape[1], k.shape[1]
-    if opts.use_flash_kernel and sq > 1 and kv_len is None:
+    if opts.use_flash_kernel and sq > 1 and kv_len is None \
+            and jnp.ndim(kv_offset) == 0:
         from repro.kernels import ops as kernel_ops
         return kernel_ops.flash_attention(
             q, k, v, causal=causal, window=window, kv_offset=kv_offset)

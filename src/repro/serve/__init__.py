@@ -1,0 +1,10 @@
+"""Continuous-batching serve subsystem (request queue → pipeline slots)."""
+from repro.serve.request import (  # noqa: F401
+    Completion,
+    Request,
+    load_trace,
+    poisson_trace,
+    save_trace,
+)
+from repro.serve.batcher import Batcher, Slot  # noqa: F401
+from repro.serve.engine import ServeEngine, static_serve  # noqa: F401

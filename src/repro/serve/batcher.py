@@ -1,0 +1,129 @@
+"""Admission scheduling: map a dynamic request queue onto pipeline slots.
+
+The pipelined serve step has a fixed slot grid — ``n_microbatches``
+microbatch slots × ``mb_global`` batch rows per slot — and every (m, b) cell
+owns one KV/SSM-cache row. The :class:`Batcher` tracks which cell holds which
+request, admits queued requests FCFS into freed cells, and plans chunked
+prefill *waves*: each admitted prompt is split into ``prefill_chunks``
+near-equal chunks, and each wave groups cells by next-chunk length so every
+pipeline call keeps a static token shape (cells in the same call may sit at
+different cache depths — the append step takes per-row kv offsets).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.serve.request import Request
+
+
+@dataclasses.dataclass
+class Slot:
+    """One (microbatch m, batch-row b) cell of the serve grid."""
+
+    m: int
+    b: int
+    request: Optional[Request] = None
+    pos: int = 0  # tokens currently written to this cell's cache row
+    chunks: list = dataclasses.field(default_factory=list)  # pending prompt
+    generated: list = dataclasses.field(default_factory=list)
+    admitted_tick: int = -1
+
+    @property
+    def free(self) -> bool:
+        return self.request is None
+
+    @property
+    def prefilling(self) -> bool:
+        return self.request is not None and bool(self.chunks)
+
+    @property
+    def decoding(self) -> bool:
+        return self.request is not None and not self.chunks
+
+    @property
+    def finished(self) -> bool:
+        return (self.request is not None and not self.chunks
+                and len(self.generated) >= self.request.max_new_tokens)
+
+    def release(self) -> None:
+        self.request = None
+        self.pos = 0
+        self.chunks = []
+        self.generated = []
+        self.admitted_tick = -1
+
+
+class Batcher:
+    """FCFS admission of queued requests into free slot cells."""
+
+    def __init__(self, n_microbatches: int, mb_global: int,
+                 prefill_chunks: int, max_seq: int):
+        self.n_microbatches = n_microbatches
+        self.mb_global = mb_global
+        self.prefill_chunks = max(1, prefill_chunks)
+        self.max_seq = max_seq
+        self.slots = [Slot(m, b) for m in range(n_microbatches)
+                      for b in range(mb_global)]
+        self.queue: deque = deque()
+
+    # -- queue ---------------------------------------------------------------
+
+    def enqueue(self, req: Request) -> None:
+        if req.total_len > self.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt_len + max_new_tokens - 1 = "
+                f"{req.total_len} exceeds the engine cache length "
+                f"{self.max_seq}")
+        self.queue.append(req)
+
+    # -- admission -----------------------------------------------------------
+
+    def split_chunks(self, prompt: np.ndarray) -> list:
+        """Near-equal prompt chunks (lengths differ by at most 1), so a trace
+        with L distinct prompt lengths compiles at most 2L append shapes."""
+        nc = min(self.prefill_chunks, prompt.shape[0])
+        return [c for c in np.array_split(prompt, nc) if c.size]
+
+    def admit(self, now: float) -> list:
+        """Move queued requests (arrival <= now) into free cells, FCFS.
+        Returns the newly admitted slots."""
+        admitted = []
+        free = [s for s in self.slots if s.free]
+        while free and self.queue and self.queue[0].arrival <= now:
+            req = self.queue.popleft()
+            slot = free.pop(0)
+            slot.request = req
+            slot.pos = 0
+            slot.chunks = self.split_chunks(req.prompt)
+            slot.generated = []
+            slot.admitted_tick = int(now)
+            admitted.append(slot)
+        return admitted
+
+    # -- wave planning -------------------------------------------------------
+
+    def prefill_groups(self) -> dict:
+        """{chunk_len: [slots]} for the cells whose next prompt chunk has
+        that length — one static-shape append call per key."""
+        groups: dict = {}
+        for s in self.slots:
+            if s.prefilling:
+                groups.setdefault(int(s.chunks[0].shape[0]), []).append(s)
+        return groups
+
+    def decode_slots(self) -> list:
+        return [s for s in self.slots if s.decoding and not s.finished]
+
+    def occupied(self) -> int:
+        return sum(1 for s in self.slots if not s.free)
+
+    @property
+    def n_cells(self) -> int:
+        return len(self.slots)
+
+    def idle(self) -> bool:
+        return not self.queue and all(s.free for s in self.slots)

@@ -1,0 +1,319 @@
+"""Continuous-batching serve engine over the Hydra pipeline.
+
+The static path in ``launch/serve.py --static`` admits one fixed batch, runs
+prefill once, and decodes in lockstep — when a request finishes early its
+pipeline slot idles until the whole batch drains, the exact "idle slots"
+pathology the paper's shard parallelism exists to kill. This engine applies
+the same slot-filling insight to a *dynamic* request stream.
+
+Slot lifecycle (one cell = one (microbatch m, batch-row b) position of the
+pipelined serve step, owning one KV/SSM-cache row):
+
+  FREE ──admit──► PREFILL ──last chunk──► DECODE ──budget hit──► FREE
+   ▲   (queue head moves into the cell;       (one token per engine round │
+   │    cache row zeroed — KV rows beyond      via the masked decode      │
+   │    kv_len are never attended, but         step; per-row positions)   │
+   │    SSM states are recurrent and must                                 │
+   │    restart from zero)                                                │
+   └──────────────────────────────────────────────────────────────────────┘
+
+* **Admission / chunked prefill.** A prompt is split into
+  ``EngineConfig.prefill_chunks`` near-equal chunks; each engine round
+  advances every prefilling cell by one chunk via the ``append`` serve step
+  (per-row kv offsets — cells in the same call may sit at different depths).
+  Calls are grouped by chunk length so token shapes stay static; the final
+  chunk's head output is the request's first generated token.
+* **Recycling.** The round a request exhausts its budget, its cell is
+  released and the cache row is zeroed (``make_slot_reset``); the next
+  queued request is admitted the same round. Slots therefore never idle
+  while the queue is non-empty — steady-state occupancy stays ~1 where the
+  static path decays as a batch drains.
+* **Exactness.** Every active row always processes exactly its own real
+  tokens at its own positions, so greedy tokens match the static-batch path
+  (and the single-device oracle) per request, bit-for-bit.
+
+Per-request completion is exposed as :class:`repro.serve.request.Completion`
+records instead of lockstep tensors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import pipeline as pl
+from repro.core.partitioner import plan_stages
+from repro.models.layers import ModelOptions
+from repro.serve.batcher import Batcher
+from repro.serve.request import Completion, Request
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Scheduling/throughput counters for one engine run."""
+
+    ticks: int = 0
+    calls: int = 0
+    tokens_generated: int = 0
+    prompt_tokens: int = 0
+    wall_s: float = 0.0
+    occupancy_samples: list = dataclasses.field(default_factory=list)
+    decode_busy_samples: list = dataclasses.field(default_factory=list)
+
+    @property
+    def slot_occupancy(self) -> float:
+        """Mean fraction of slot cells holding a live request, sampled once
+        per engine round — the paper's utilization story applied to serving."""
+        if not self.occupancy_samples:
+            return 0.0
+        return float(np.mean(self.occupancy_samples))
+
+    @property
+    def decode_occupancy(self) -> float:
+        """Mean busy fraction of the decode step's rows."""
+        if not self.decode_busy_samples:
+            return 0.0
+        return float(np.mean(self.decode_busy_samples))
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_generated / self.wall_s if self.wall_s > 0 else 0.0
+
+    def summary(self) -> dict:
+        return {"ticks": self.ticks, "calls": self.calls,
+                "tokens_generated": self.tokens_generated,
+                "prompt_tokens": self.prompt_tokens,
+                "slot_occupancy": round(self.slot_occupancy, 4),
+                "decode_occupancy": round(self.decode_occupancy, 4),
+                "tokens_per_s": round(self.tokens_per_s, 2)}
+
+
+class ServeEngine:
+    """Continuous-batching engine: request queue → pipeline slots.
+
+    Parameters mirror the static path: ``eng.n_microbatches`` × global
+    microbatch rows define the slot grid, ``eng.max_seq`` bounds each cache
+    row, ``eng.prefill_chunks`` sets the admission chunk count. ``eng`` is
+    normalized to one trial and spatial-chunking off (the engine chunks
+    *temporally*, across calls, so every microbatch slot owns one cache
+    group).
+    """
+
+    def __init__(self, cfg: ArchConfig, eng: pl.EngineConfig, mesh, params,
+                 opts: Optional[ModelOptions] = None):
+        if cfg.rope == "mrope" or cfg.frontend is not None:
+            raise ValueError("continuous batching supports text-only archs; "
+                             "use the static path for mrope/frontend models")
+        if eng.window:
+            raise ValueError("continuous batching does not support sliding-"
+                             "window caches yet (append-mode writes are not "
+                             "ring-buffered); see ROADMAP open items")
+        self.cfg = cfg
+        self.opts = opts or ModelOptions()
+        self.eng = dataclasses.replace(eng, n_trials=1, prefill_chunks=1)
+        self.n_chunks = max(1, eng.prefill_chunks)
+        self.mesh = mesh
+        self.params = params
+        self.mb_global = self.eng.microbatch * (
+            1 if self.eng.batch_replicated
+            else self.eng.data_size * self.eng.pod_size)
+        self.decode_step = pl.make_serve_step(
+            cfg, self.opts, self.eng, mesh, "decode", with_active=True)
+        self.append_step = pl.make_serve_step(
+            cfg, self.opts, self.eng, mesh, "append", with_active=True)
+        self.reset_fn = pl.make_slot_reset(cfg, self.eng, mesh)
+        self.cache = pl.serve_cache_struct(cfg, self.eng, dry_run=False)
+        self.batcher = Batcher(self.eng.n_microbatches, self.mb_global,
+                               self.n_chunks, self.eng.max_seq)
+        self.tick = 0
+        self.stats = ServeStats()
+        self.completions: list = []
+
+    # -- public API ----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.batcher.enqueue(req)
+
+    def done(self) -> bool:
+        return self.batcher.idle()
+
+    def run(self, requests=None, max_ticks: int = 100_000) -> list:
+        """Drive the engine until every submitted request completes."""
+        for r in requests or []:
+            self.submit(r)
+        t0 = time.monotonic()
+        while not self.done():
+            if self.tick >= max_ticks:
+                raise RuntimeError(f"engine did not drain in {max_ticks} "
+                                   f"ticks ({self.batcher.occupied()} live)")
+            self.step()
+        self.stats.wall_s += time.monotonic() - t0
+        return sorted(self.completions, key=lambda c: c.rid)
+
+    # -- one scheduling round ------------------------------------------------
+
+    def step(self) -> bool:
+        """Admit → prefill wave → decode. Returns False when fully drained."""
+        if self.done():
+            return False
+        self.tick += 1
+        self.stats.ticks += 1
+        admitted = self.batcher.admit(self.tick)
+        if admitted:
+            self._reset_rows(admitted)
+            self.stats.prompt_tokens += sum(
+                s.request.prompt_len for s in admitted)
+        self.stats.occupancy_samples.append(
+            self.batcher.occupied() / self.batcher.n_cells)
+        for qlen, slots in sorted(self.batcher.prefill_groups().items()):
+            self._prefill_call(qlen, slots)
+        dec = self.batcher.decode_slots()
+        if dec:
+            self._decode_call(dec)
+        return True
+
+    # -- internals -----------------------------------------------------------
+
+    def _grid(self, qlen: int):
+        m, b = self.eng.n_microbatches, self.mb_global
+        return (np.zeros((1, m, b, qlen), np.int32),
+                np.zeros((1, m, b), np.int32),
+                np.zeros((1, m, b), bool))
+
+    def _reset_rows(self, slots) -> None:
+        mask = np.zeros((1, self.eng.n_microbatches, self.mb_global), bool)
+        for s in slots:
+            mask[0, s.m, s.b] = True
+        self.cache = self.reset_fn(self.cache, jnp.asarray(mask))
+
+    def _prefill_call(self, qlen: int, slots) -> None:
+        tokens, positions, active = self._grid(qlen)
+        for s in slots:
+            tokens[0, s.m, s.b] = s.chunks[0]
+            positions[0, s.m, s.b] = s.pos
+            active[0, s.m, s.b] = True
+        self.cache, tok, _ = self.append_step(
+            self.params, self.cache,
+            {"tokens": jnp.asarray(tokens),
+             "positions": jnp.asarray(positions),
+             "active": jnp.asarray(active)})
+        tok = np.asarray(tok)
+        self.stats.calls += 1
+        for s in slots:
+            s.chunks.pop(0)
+            s.pos += qlen
+            if not s.chunks:  # final chunk → first generated token
+                s.generated.append(int(tok[0, s.m, s.b]))
+                self.stats.tokens_generated += 1
+                self._maybe_finish(s)
+
+    def _decode_call(self, slots) -> None:
+        tokens, positions, active = self._grid(1)
+        for s in slots:
+            tokens[0, s.m, s.b, 0] = s.generated[-1]
+            positions[0, s.m, s.b] = s.pos
+            active[0, s.m, s.b] = True
+        self.cache, tok, _ = self.decode_step(
+            self.params, self.cache,
+            {"tokens": jnp.asarray(tokens),
+             "positions": jnp.asarray(positions),
+             "active": jnp.asarray(active)})
+        tok = np.asarray(tok)
+        self.stats.calls += 1
+        self.stats.decode_busy_samples.append(
+            len(slots) / self.batcher.n_cells)
+        for s in slots:
+            s.pos += 1
+            s.generated.append(int(tok[0, s.m, s.b]))
+            self.stats.tokens_generated += 1
+            self._maybe_finish(s)
+
+    def _maybe_finish(self, slot) -> None:
+        if not slot.finished:
+            return
+        req = slot.request
+        self.completions.append(Completion(
+            rid=req.rid, prompt_len=req.prompt_len,
+            tokens=list(slot.generated[:req.max_new_tokens]),
+            arrival=req.arrival, admitted_tick=slot.admitted_tick,
+            finished_tick=self.tick))
+        slot.release()  # the cell is reusable the same round it finishes
+
+
+# ---------------------------------------------------------------------------
+# Static-batching baseline (the seed's lockstep path, instrumented)
+# ---------------------------------------------------------------------------
+
+
+def static_serve(cfg: ArchConfig, eng: pl.EngineConfig, mesh, params,
+                 requests, opts: Optional[ModelOptions] = None):
+    """Lockstep static batching over the same slot grid, for comparison.
+
+    Admits requests in consecutive groups of ``n_cells``, prefills each group
+    at once (prompts must share one length — the static path's restriction),
+    then decodes until EVERY request in the group hits its budget; early
+    finishers idle their slots. Arrival times are ignored (a clairvoyant
+    static scheduler — flatters the baseline). Returns
+    (completions, ServeStats).
+    """
+    opts = opts or ModelOptions()
+    eng = dataclasses.replace(eng, n_trials=1, prefill_chunks=1)
+    mb_global = eng.microbatch * (1 if eng.batch_replicated
+                                  else eng.data_size * eng.pod_size)
+    n_cells = eng.n_microbatches * mb_global
+    prefill = pl.make_serve_step(cfg, opts, eng, mesh, "prefill")
+    decode = pl.make_serve_step(cfg, opts, eng, mesh, "decode")
+    stats = ServeStats()
+    completions = []
+    reqs = list(requests)
+    t0 = time.monotonic()
+    for g0 in range(0, len(reqs), n_cells):
+        group = reqs[g0:g0 + n_cells]
+        plens = {r.prompt_len for r in group}
+        if len(plens) != 1:
+            raise ValueError("static batching requires uniform prompt "
+                             f"lengths per group, got {sorted(plens)}")
+        plen = plens.pop()
+        tokens = np.zeros((1, eng.n_microbatches, mb_global, plen), np.int32)
+        for i, r in enumerate(group):
+            tokens[0, i // mb_global, i % mb_global] = r.prompt
+        cache = pl.serve_cache_struct(cfg, eng, dry_run=False)
+        stats.ticks += 1
+        admitted_tick = stats.ticks  # the group's prefill tick
+        stats.calls += 1
+        stats.occupancy_samples.append(len(group) / n_cells)
+        stats.prompt_tokens += plen * len(group)
+        cache, tok, _ = prefill(params, cache, {"tokens": jnp.asarray(tokens)})
+        gen = [np.asarray(tok)]
+        stats.tokens_generated += len(group)
+        max_gen = max(r.max_new_tokens for r in group)
+        pos = plen
+        for t in range(1, max_gen):
+            live = sum(1 for r in group if r.max_new_tokens > t)
+            stats.ticks += 1
+            stats.calls += 1
+            stats.occupancy_samples.append(live / n_cells)
+            stats.decode_busy_samples.append(live / n_cells)
+            cache, tok, _ = decode(params, cache, {
+                "tokens": jnp.asarray(gen[-1][..., None]),
+                "positions": jnp.full((1, eng.n_microbatches, mb_global),
+                                      pos, jnp.int32)})
+            gen.append(np.asarray(tok))
+            stats.tokens_generated += live
+            pos += 1
+        toks = np.stack(gen, axis=-1)  # (1, M, mbg, max_gen)
+        for i, r in enumerate(group):
+            completions.append(Completion(
+                rid=r.rid, prompt_len=plen,
+                tokens=toks[0, i // mb_global, i % mb_global,
+                            :r.max_new_tokens].tolist(),
+                arrival=r.arrival, admitted_tick=admitted_tick,
+                # the decode tick that produced the request's last token
+                # (its slot still idles until the group drains)
+                finished_tick=admitted_tick + r.max_new_tokens - 1))
+    stats.wall_s = time.monotonic() - t0
+    return sorted(completions, key=lambda c: c.rid), stats

@@ -1,0 +1,110 @@
+"""Request/completion datatypes and arrival traces for the serve engine.
+
+A *trace* is a list of :class:`Request` with monotone ``arrival`` times in
+engine-tick units; ``poisson_trace`` synthesizes the open-loop arrival
+process the benchmarks replay, and ``save_trace``/``load_trace`` round-trip
+traces through JSONL so a measured production stream can be replayed with
+``python -m repro.launch.serve --trace path.jsonl``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request: a prompt and a greedy-generation budget."""
+
+    rid: int
+    prompt: np.ndarray  # (prompt_len,) int32 token ids
+    max_new_tokens: int
+    arrival: float = 0.0  # engine tick at which the request becomes visible
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32)
+        if self.prompt.ndim != 1 or self.prompt.size == 0:
+            raise ValueError(f"request {self.rid}: prompt must be a non-empty "
+                             f"1-d token array, got shape {self.prompt.shape}")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.rid}: max_new_tokens must be >=1")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def total_len(self) -> int:
+        """Cache rows the request needs: prompt + generated (the final token
+        is emitted by the head and never written back)."""
+        return self.prompt_len + self.max_new_tokens - 1
+
+
+@dataclasses.dataclass
+class Completion:
+    """Per-request result + scheduling timestamps (engine ticks)."""
+
+    rid: int
+    prompt_len: int
+    tokens: list  # generated token ids (greedy), len == max_new_tokens
+    arrival: float
+    admitted_tick: int
+    finished_tick: int
+
+    @property
+    def latency_ticks(self) -> float:
+        return self.finished_tick - self.arrival
+
+    @property
+    def queue_ticks(self) -> float:
+        return self.admitted_tick - self.arrival
+
+
+def poisson_trace(n_requests: int, rate: float, vocab: int,
+                  prompt_lens: Sequence[int] = (8, 12, 16),
+                  gen_lens: Sequence[int] = (4, 8, 12),
+                  seed: int = 0) -> list:
+    """Open-loop Poisson arrivals with staggered prompt/gen lengths.
+
+    ``rate`` is requests per engine tick. Prompt/gen lengths are drawn
+    uniformly from the given sets — small sets on purpose, so the engine
+    compiles few distinct chunk shapes (production would bucket lengths
+    the same way).
+    """
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    reqs = []
+    for i in range(n_requests):
+        t += float(rng.exponential(1.0 / max(rate, 1e-9)))
+        pl = int(rng.choice(list(prompt_lens)))
+        gl = int(rng.choice(list(gen_lens)))
+        prompt = rng.integers(0, vocab, (pl,)).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=gl,
+                            arrival=t))
+    return reqs
+
+
+def save_trace(path: str, requests: Sequence[Request]) -> None:
+    with open(path, "w") as f:
+        for r in requests:
+            f.write(json.dumps({"rid": r.rid, "prompt": r.prompt.tolist(),
+                                "max_new_tokens": r.max_new_tokens,
+                                "arrival": r.arrival}) + "\n")
+
+
+def load_trace(path: str) -> list:
+    reqs = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            d = json.loads(line)
+            reqs.append(Request(rid=int(d["rid"]),
+                                prompt=np.asarray(d["prompt"], np.int32),
+                                max_new_tokens=int(d["max_new_tokens"]),
+                                arrival=float(d.get("arrival", 0.0))))
+    return reqs

@@ -1,0 +1,26 @@
+"""Shared pytest configuration.
+
+XLA fixes the host-platform device count at the first jax import, so the
+fake-device flag must be set HERE — conftest imports before any test module,
+which lets multi-device shard_map tests run inside the main pytest process
+under a plain ``python -m pytest`` (no wrapper env needed).
+"""
+import os
+import sys
+
+_FLAG = "--xla_force_host_platform_device_count=8"
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " "
+                               + _FLAG).strip()
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running multi-device integration test "
+        "(deselect with -m 'not slow')")

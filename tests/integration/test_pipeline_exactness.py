@@ -1,26 +1,28 @@
-"""Integration check (run in a subprocess with fake host devices):
-
-Hydra's pipelined multi-trial training must EXACTLY reproduce per-trial
+"""Hydra's pipelined multi-trial training must EXACTLY reproduce per-trial
 single-device training — the paper's desideratum D3. Trains K trials for a
 few steps both ways and compares losses and final parameters.
 
-Usage: XLA_FLAGS=--xla_force_host_platform_device_count=8 python
-       tests/integration/pipeline_exactness.py [arch] [fsdp]
+Collected by pytest (8 fake host devices come from tests/conftest.py);
+``python tests/integration/test_pipeline_exactness.py [arch] [fsdp] [skip]``
+still works standalone.
 """
 import os
 import sys
 
-if __name__ == "__main__" and "--xla" not in os.environ.get("XLA_FLAGS", ""):
-    os.environ.setdefault("XLA_FLAGS",
-                          "--xla_force_host_platform_device_count=8")
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
 
 import jax  # noqa: E402
+import pytest  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.configs import ASSIGNED_ARCHS  # noqa: E402
 from repro.core import pipeline as pl  # noqa: E402
 from repro.core.partitioner import plan_stages  # noqa: E402
+from repro.launch.mesh import make_test_mesh  # noqa: E402
 from repro.data.pipeline import TrainBatches  # noqa: E402
 from repro.models import lm  # noqa: E402
 from repro.models.layers import ModelOptions  # noqa: E402
@@ -92,11 +94,10 @@ def sequential_reference(cfg, opts, params_stacked, batches, hparams,
     return params, np.asarray(last_loss)
 
 
-def main(arch="chatglm3-6b", fsdp=False, skip_bubbles=False):
+def run_case(arch="chatglm3-6b", fsdp=False, skip_bubbles=False):
     n_dev = jax.device_count()
     assert n_dev >= 8, n_dev
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_test_mesh(2, 4)
     cfg = ASSIGNED_ARCHS[arch].reduced()
     opts = ModelOptions(remat=True,
                         moe_capacity_factor=64.0)  # dropless => oracle-exact
@@ -141,18 +142,31 @@ def main(arch="chatglm3-6b", fsdp=False, skip_bubbles=False):
                                            - b.astype(jnp.float32)))),
         pipe_params, jax.device_get(ref_final))
     err_params = max(jax.tree.leaves(diffs))
-    print(f"arch={arch} fsdp={fsdp} skip={skip_bubbles} "
-          f"loss_err={err_loss:.3e} param_err={err_params:.3e}")
     tol = 2e-4
-    assert err_loss < tol, (pipe_loss, ref_loss)
+    assert err_loss < tol, (arch, pipe_loss, ref_loss)
     assert err_params < 5e-3, sorted(
         jax.tree_util.tree_leaves_with_path(diffs),
         key=lambda kv: -kv[1])[:5]
-    print("EXACTNESS OK")
+
+
+@pytest.mark.parametrize("arch", ["chatglm3-6b", "granite-moe-3b-a800m"])
+def test_pipeline_exactness(arch):
+    run_case(arch)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["falcon-mamba-7b", "zamba2-7b"])
+def test_pipeline_exactness_ssm_hybrid(arch):
+    run_case(arch)
+
+
+def test_pipeline_exactness_fsdp():
+    run_case("chatglm3-6b", fsdp=True)
 
 
 if __name__ == "__main__":
     arch = sys.argv[1] if len(sys.argv) > 1 else "chatglm3-6b"
     fsdp = "fsdp" in sys.argv[2:]
     skip = "skip" in sys.argv[2:]
-    main(arch, fsdp, skip)
+    run_case(arch, fsdp, skip)
+    print("EXACTNESS OK")

@@ -1,31 +1,35 @@
-"""Integration check (subprocess, 8 fake devices): the pipelined serving
-engine (prefill + decode over the stage ring) must reproduce the
-single-device forward exactly — greedy tokens identical, logit-max close.
+"""The pipelined serving engine (prefill + decode over the stage ring) must
+reproduce the single-device forward exactly — greedy tokens identical.
 
-Usage: python tests/integration/serve_pipeline_check.py [arch]
+Collected by pytest (8 fake host devices come from tests/conftest.py);
+``python tests/integration/test_serve_pipeline.py [arch]`` still works
+standalone.
 """
 import os
 
-if __name__ == "__main__":
-    os.environ.setdefault("XLA_FLAGS",
-                          "--xla_force_host_platform_device_count=8")
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
 
 import sys  # noqa: E402
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
+import pytest  # noqa: E402
 
 from repro.configs import ASSIGNED_ARCHS  # noqa: E402
 from repro.core import pipeline as pl  # noqa: E402
 from repro.core.partitioner import plan_stages  # noqa: E402
+from repro.launch.mesh import make_test_mesh  # noqa: E402
 from repro.models import lm  # noqa: E402
 from repro.models.layers import ModelOptions  # noqa: E402
 
 
-def main(arch="chatglm3-6b"):
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+@pytest.mark.parametrize("arch", ["chatglm3-6b", "falcon-mamba-7b"])
+def test_serve_pipeline_matches_single_device(arch):
+    mesh = make_test_mesh(2, 4)
     cfg = ASSIGNED_ARCHS[arch].reduced()
     opts = ModelOptions(moe_capacity_factor=64.0)
     prompt_len, gen_len = 12, 6
@@ -44,11 +48,11 @@ def main(arch="chatglm3-6b"):
     prefill = pl.make_serve_step(cfg, opts, eng, mesh, "prefill")
     decode = pl.make_serve_step(cfg, opts, eng, mesh, "decode")
     cache = pl.serve_cache_struct(cfg, eng, dry_run=False)
-    cache, tok, vmax = prefill(params, cache, {"tokens": prompts})
+    cache, tok, _ = prefill(params, cache, {"tokens": prompts})
     pipe_tokens = [np.asarray(tok)]
     pos = prompt_len
     for _ in range(gen_len - 1):
-        cache, tok, vmax = decode(params, cache, {
+        cache, tok, _ = decode(params, cache, {
             "tokens": jnp.asarray(pipe_tokens[-1][..., None]),
             "positions": jnp.full((1, eng.n_microbatches, mbg), pos,
                                   jnp.int32)})
@@ -80,10 +84,11 @@ def main(arch="chatglm3-6b"):
         oracle = np.stack(oracle, axis=-1)  # (mbg, gen)
         mism += int((oracle != pipe[0, m]).sum())
     total = eng.n_microbatches * mbg * gen_len
-    print(f"arch={arch} greedy-token mismatches: {mism}/{total}")
-    assert mism == 0, "pipelined serving diverged from single-device oracle"
-    print("SERVE PIPELINE OK")
+    assert mism == 0, (f"arch={arch}: pipelined serving diverged from "
+                       f"single-device oracle ({mism}/{total} tokens)")
 
 
 if __name__ == "__main__":
-    main(sys.argv[1] if len(sys.argv) > 1 else "chatglm3-6b")
+    test_serve_pipeline_matches_single_device(
+        sys.argv[1] if len(sys.argv) > 1 else "chatglm3-6b")
+    print("SERVE PIPELINE OK")

@@ -1,11 +1,13 @@
-"""Multi-device integration tests, each run in a subprocess with fake host
-devices (jax locks the device count at first init, so the main pytest
-process stays single-device — per the dry-run isolation rule)."""
+"""Driver end-to-end tests, each run in a subprocess (the launchers own
+their process: argv parsing, env setup, stdout reporting).
+
+The pipeline/serve exactness checks that used to hide behind subprocess
+wrappers here are now ordinary pytest modules under ``tests/integration/``
+(collected in-process — tests/conftest.py provides the fake devices).
+"""
 import os
 import subprocess
 import sys
-
-import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ENV = {**os.environ,
@@ -21,25 +23,6 @@ def _run(args, timeout=540):
     return proc.stdout
 
 
-@pytest.mark.parametrize("arch", ["chatglm3-6b", "granite-moe-3b-a800m",
-                                  "falcon-mamba-7b", "zamba2-7b"])
-def test_pipeline_exactness(arch):
-    out = _run(["tests/integration/pipeline_exactness.py", arch])
-    assert "EXACTNESS OK" in out
-
-
-def test_pipeline_exactness_fsdp():
-    out = _run(["tests/integration/pipeline_exactness.py", "chatglm3-6b",
-                "fsdp"])
-    assert "EXACTNESS OK" in out
-
-
-@pytest.mark.parametrize("arch", ["chatglm3-6b", "falcon-mamba-7b"])
-def test_serve_pipeline(arch):
-    out = _run(["tests/integration/serve_pipeline_check.py", arch])
-    assert "SERVE PIPELINE OK" in out
-
-
 def test_train_driver_end_to_end(tmp_path):
     out = _run(["-m", "repro.launch.train", "--arch", "chatglm3-6b",
                 "--smoke", "--trials", "2", "--steps", "4",
@@ -49,15 +32,24 @@ def test_train_driver_end_to_end(tmp_path):
     assert "best_trial" in out
 
 
-def test_serve_driver_end_to_end():
+def test_serve_driver_continuous_end_to_end():
     out = _run(["-m", "repro.launch.serve", "--arch", "chatglm3-6b",
                 "--smoke", "--n-data", "2", "--n-model", "4",
-                "--batch", "3", "--prompt-len", "8", "--gen-len", "4"])
-    assert "generated" in out
+                "--slots", "3", "--prompt-len", "8", "--gen-len", "4",
+                "--n-requests", "8", "--rate", "2.0"])
+    assert "continuous:" in out and "slot occupancy" in out
 
 
-def test_chunked_prefill_exactness():
-    """Chunked prefill (sequence chunks as Hydra slots) must match plain
-    prefill exactly — tokens and caches — across attention/SSM/hybrid."""
-    out = _run(["tests/integration/chunked_prefill_check.py"])
-    assert "CHUNKED PREFILL OK" in out
+def test_serve_driver_trace_replay(tmp_path):
+    """--trace replays a recorded JSONL request stream."""
+    trace = tmp_path / "stream.jsonl"
+    gen = _run(["-c", (
+        "from repro.serve import poisson_trace, save_trace; "
+        "save_trace(%r, poisson_trace(5, 1.0, 128, prompt_lens=(4, 8), "
+        "gen_lens=(2, 4), seed=3))") % str(trace)])
+    assert trace.exists(), gen
+    out = _run(["-m", "repro.launch.serve", "--arch", "chatglm3-6b",
+                "--smoke", "--n-data", "1", "--n-model", "2",
+                "--slots", "2", "--prompt-len", "8", "--gen-len", "4",
+                "--trace", str(trace)])
+    assert "5 requests" in out and "slot occupancy" in out

@@ -2,7 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need the optional hypothesis package")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import simulator as sim
 from repro.core.partitioner import partition_costs
