@@ -1,8 +1,17 @@
-"""Continuous vs static batching under a Poisson arrival trace (subprocess,
-8 fake host devices): tokens/sec and steady-state slot occupancy. The claim
-under test is Hydra's slot-filling insight applied to serving — recycling a
-finished request's pipeline slot immediately keeps occupancy near 1 where
-the lockstep batch decays as it drains."""
+"""Serving comparisons under a Poisson arrival trace (subprocess, 8 fake
+host devices).
+
+Two claims under test:
+
+* ``serve/continuous_vs_static`` — Hydra's slot-filling insight applied to
+  serving: recycling a finished request's pipeline slot immediately keeps
+  occupancy near 1 where the lockstep batch decays as it drains.
+* ``serve/paged_vs_dense`` — paging the KV-cache (shared block pool +
+  per-request block tables) lets ``plan_serve_capacity`` admit by *expected*
+  request length instead of reserving a worst-case ``max_seq`` strip per
+  cell, so the same HBM budget admits strictly more concurrent requests —
+  with per-request greedy tokens bit-identical to the dense path.
+"""
 import json
 import os
 import subprocess
@@ -16,25 +25,62 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs import ASSIGNED_ARCHS
 from repro.core import pipeline as pl
+from repro.core import scheduler as sched
 from repro.core.partitioner import plan_stages
 from repro.launch.mesh import make_test_mesh
 from repro.models.layers import ModelOptions
-from repro.serve import Request, ServeEngine, static_serve
+from repro.serve import Request, ServeEngine, poisson_trace, static_serve
 
 cfg = ASSIGNED_ARCHS["chatglm3-6b"].reduced()
 opts = ModelOptions()
 mesh = make_test_mesh(1, 4)
+
+def clone(reqs):
+    return [r.clone() for r in reqs]
+
+# --- paged vs dense at the SAME HBM budget --------------------------------
+MAX_SEQ, BLOCK = 20, 4
+base = pl.EngineConfig(n_trials=1, n_microbatches=1, microbatch=2,
+                       n_stages=4, data_size=1, max_seq=MAX_SEQ,
+                       cache_dtype=jnp.float32, prefill_chunks=2)
+# budget = fixed fwd cost + two dense slots' worth of cache strips
+est = sched.per_chip_bytes(cfg, base, MAX_SEQ, train=False)
+strip = base.microbatch * MAX_SEQ * sched.kv_token_bytes_per_chip(cfg, base)
+budget = est.params_bytes + est.act_bytes + 2 * strip
+dense_eng = sched.plan_serve_capacity(cfg, base, MAX_SEQ, hbm_bytes=budget,
+                                      budget_fraction=1.0, max_slots=8)
+paged_eng = sched.plan_serve_capacity(cfg, base, MAX_SEQ, paged=True,
+                                      expected_seq=10, block_size=BLOCK,
+                                      hbm_bytes=budget, budget_fraction=1.0,
+                                      max_slots=8)
+plan = plan_stages(cfg, base.n_stages)
+params = pl.init_trial_params(cfg, base, plan, jax.random.PRNGKey(0),
+                              max_pos=MAX_SEQ)
+trace = poisson_trace(16, rate=3.0, vocab=cfg.vocab_size,
+                      prompt_lens=(8, 12), gen_lens=(2, 4), seed=0)
+e_dense = ServeEngine(cfg, dense_eng, mesh, params, opts)
+comp_dense = e_dense.run(clone(trace))
+e_paged = ServeEngine(cfg, paged_eng, mesh, params, opts)
+comp_paged = e_paged.run(clone(trace))
+paged_mism = sum(a.tokens != b.tokens
+                 for a, b in zip(comp_dense, comp_paged))
+pvd = {
+    "budget_mb": round(budget / 2**20, 2),
+    "cells_dense": e_dense.batcher.n_cells,
+    "cells_paged": e_paged.batcher.n_cells,
+    "n_blocks": paged_eng.n_blocks, "block_size": paged_eng.block_size,
+    "token_mismatches": paged_mism,
+    "dense": e_dense.stats.summary(), "paged": e_paged.stats.summary(),
+}
+
+# --- continuous vs static (uniform prompts, staggered budgets) ------------
 PROMPT, MAX_GEN, N_REQ = 8, 8, 18
 max_seq = PROMPT + MAX_GEN
 eng = pl.EngineConfig(n_trials=1, n_microbatches=3, microbatch=2, n_stages=4,
                       data_size=1, max_seq=max_seq, cache_dtype=jnp.float32,
                       prefill_chunks=2)
-plan = plan_stages(cfg, eng.n_stages)
-params = pl.init_trial_params(cfg, eng, plan, jax.random.PRNGKey(0),
-                              max_pos=max_seq)
-
-# staggered Poisson trace: uniform prompts (static needs them), ragged
-# generation budgets (what staggers completion and idles static slots)
+params_cs = pl.init_trial_params(cfg, eng, plan, jax.random.PRNGKey(0),
+                                 max_pos=max_seq)
 rng = np.random.default_rng(0)
 t, reqs = 0.0, []
 for i in range(N_REQ):
@@ -42,16 +88,15 @@ for i in range(N_REQ):
     reqs.append(Request(i, rng.integers(0, cfg.vocab_size,
                                         (PROMPT,)).astype(np.int32),
                         int(rng.integers(2, MAX_GEN + 1)), arrival=t))
-
-engine = ServeEngine(cfg, eng, mesh, params, opts)
-cont = engine.run([Request(r.rid, r.prompt.copy(), r.max_new_tokens,
-                           r.arrival) for r in reqs])
+engine = ServeEngine(cfg, eng, mesh, params_cs, opts)
+cont = engine.run(clone(reqs))
 cs = engine.stats
-stat, ss = static_serve(cfg, eng, mesh, params, reqs, opts)
+stat, ss = static_serve(cfg, eng, mesh, params_cs, reqs, opts)
 mism = sum(a.tokens != b.tokens for a, b in zip(cont, stat))
 print(json.dumps({
     "token_mismatches": mism,
-    "continuous": cs.summary(), "static": ss.summary()}))
+    "continuous": cs.summary(), "static": ss.summary(),
+    "paged_vs_dense": pvd}))
 """
 
 
@@ -64,8 +109,8 @@ def run() -> list:
         return [{"name": "serve/error", "us_per_call": -1,
                  "derived": {"stderr": proc.stderr[-500:]}}]
     d = json.loads(proc.stdout.strip().splitlines()[-1])
-    cont, stat = d["continuous"], d["static"]
-    return [{
+    cont, stat, pvd = d["continuous"], d["static"], d["paged_vs_dense"]
+    rows = [{
         "name": "serve/continuous_vs_static",
         "us_per_call": round(1e6 / max(cont["tokens_per_s"], 1e-9), 1),
         "derived": {
@@ -78,3 +123,30 @@ def run() -> list:
             "token_mismatches": d["token_mismatches"],
         },
     }]
+    dense, paged = pvd["dense"], pvd["paged"]
+    row = {
+        "name": "serve/paged_vs_dense",
+        "us_per_call": round(1e6 / max(paged["tokens_per_s"], 1e-9), 1),
+        "derived": {
+            "hbm_budget_mb": pvd["budget_mb"],
+            "capacity_cells_dense": pvd["cells_dense"],
+            "capacity_cells_paged": pvd["cells_paged"],
+            "peak_live_dense": dense["peak_live"],
+            "peak_live_paged": paged["peak_live"],
+            "slot_occupancy_dense": dense["slot_occupancy"],
+            "slot_occupancy_paged": paged["slot_occupancy"],
+            "tokens_per_s_dense": dense["tokens_per_s"],
+            "tokens_per_s_paged": paged["tokens_per_s"],
+            "pool": f"{pvd['n_blocks']}x{pvd['block_size']}",
+            "pool_stalls": paged.get("pool_stalls", 0),
+            "token_mismatches": pvd["token_mismatches"],
+            "paged_admits_more": pvd["cells_paged"] > pvd["cells_dense"],
+        },
+    }
+    # the tentpole claim IS a failure condition: equal-HBM paged capacity
+    # must beat dense, with bit-identical greedy tokens
+    if (pvd["token_mismatches"] or d["token_mismatches"]
+            or pvd["cells_paged"] <= pvd["cells_dense"]):
+        row["us_per_call"] = -1
+    rows.append(row)
+    return rows

@@ -5,15 +5,18 @@ Prints ``name,us_per_call,derived`` CSV:
   bert_memory/* paper §4.2 (per-device memory reduction, BERT-Large, 4-way)
   pipeline_throughput/* paper D2 (measured Hydra vs sequential MP wall time)
   exactness/*   paper D3 (pipelined == sequential training)
-  serve/*       continuous vs static batching (tok/s + slot occupancy)
+  serve/*       continuous vs static + paged vs dense (capacity, occupancy)
   roofline/*    §Roofline terms per (arch × shape) from the dry-run artifacts
+
+Exit status: non-zero when any section raises or reports a failed row
+(``us_per_call`` < 0 — the per-bench error convention), so CI smoke jobs
+catch regressions instead of reading a green harness over red rows.
 """
 import json
 import sys
 
 
 def main() -> None:
-    sections = []
     from benchmarks import (bench_exactness, bench_memory, bench_pipeline,
                             bench_serve, bench_utilization, roofline_table)
     only = sys.argv[1] if len(sys.argv) > 1 else None
@@ -25,6 +28,10 @@ def main() -> None:
         "serve": bench_serve.run,
         "roofline": roofline_table.run,
     }
+    if only and only not in all_benches:
+        sys.exit(f"unknown benchmark section {only!r} "
+                 f"(choose from: {', '.join(all_benches)})")
+    failed = []
     print("name,us_per_call,derived")
     for name, fn in all_benches.items():
         if only and only != name:
@@ -35,8 +42,13 @@ def main() -> None:
             rows = [{"name": f"{name}/harness_error", "us_per_call": -1,
                      "derived": {"error": repr(e)[:200]}}]
         for r in rows:
+            if r["us_per_call"] < 0:
+                failed.append(r["name"])
             print(f"{r['name']},{r['us_per_call']},"
                   f"\"{json.dumps(r['derived'])}\"")
+    if failed:
+        print(f"FAILED sections: {', '.join(failed)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -8,12 +8,10 @@ import tempfile
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.core import pipeline as pl
 from repro.core.partitioner import plan_stages
-from repro.core.scheduler import TrialSpec, plan_gangs
 from repro.data.pipeline import TrainBatches
 from repro.launch.mesh import make_test_mesh
 from repro.models.layers import ModelOptions

@@ -9,9 +9,7 @@ CI/CPU-quick shape:
     PYTHONPATH=src python examples/model_selection.py --tiny --steps 8
 """
 import argparse
-import dataclasses
 import json
-import os
 
 import jax
 

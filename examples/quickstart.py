@@ -7,7 +7,6 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import os
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,6 @@ request finishes (the decode_32k cell's code path at toy scale).
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/serve_decode.py --n-model 4 --n-data 2
 """
-import argparse
 import sys
 
 from repro.launch import serve

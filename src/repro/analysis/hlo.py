@@ -25,7 +25,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from collections import defaultdict
 from typing import Optional
 
 _DTYPE_BYTES = {

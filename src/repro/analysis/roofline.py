@@ -24,7 +24,6 @@ Derived metrics:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 from repro.analysis.hlo import HloCosts
 from repro.configs.base import ArchConfig, ShapeConfig

@@ -5,8 +5,7 @@ role played by ``core.trials``.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, Optional, Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ provided for heterogeneous stacks and used by the scheduler's what-if analyses.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Sequence
 
 from repro.configs.base import ArchConfig

@@ -22,7 +22,6 @@ collective is explicit and visible to the roofline analyzer.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Optional
 
 import jax
@@ -63,6 +62,12 @@ class EngineConfig:
     window: int = 0  # sliding window for attention (long-context serving)
     max_seq: int = 0  # cache length for serving
     cache_dtype: Any = jnp.bfloat16
+    # --- paged KV-cache (serving only; see repro/serve/paging.py) ----------
+    paged: bool = False  # serve KV in a shared block pool instead of dense
+    # per-slot max_seq strips (attention families only)
+    block_size: int = 16  # tokens per block
+    n_blocks: int = 0  # global pool size; rows sharded over the data/pod
+    # axes each own an equal pool slice (n_blocks / dp_degree blocks)
     # --- §Perf knobs (baseline: all off/default) ---------------------------
     skip_bubbles: bool = False  # cond-skip fill/drain ticks (compute+gathers;
     # safe: validity is uniform over every axis the inner collectives span)
@@ -604,14 +609,48 @@ def shared_slots_per_stage(cfg: ArchConfig, plan: StagePlan) -> int:
                for s in range(plan.n_stages))
 
 
+def _check_paged_support(cfg: ArchConfig, eng: EngineConfig) -> None:
+    if cfg.family in ("ssm", "hybrid") or cfg.hybrid is not None:
+        raise ValueError(
+            "paged KV-cache supports attention-family archs only (SSM/conv "
+            "states are O(1) per row and have nothing to page)")
+    if eng.n_blocks < 1:
+        raise ValueError("paged serving needs n_blocks >= 1 "
+                         "(see scheduler.plan_serve_capacity)")
+    dp = 1 if eng.batch_replicated else eng.data_size * eng.pod_size
+    if eng.n_blocks % dp:
+        raise ValueError(f"n_blocks={eng.n_blocks} must divide evenly over "
+                         f"the {dp} data-parallel pool partitions")
+
+
 def serve_cache_struct(cfg: ArchConfig, eng: EngineConfig,
                        dry_run: bool = True):
     """Global cache pytree (ShapeDtypeStructs) for the serving pipeline.
 
-    Layout: layer leaves (K, M, Lp, mb_global, ...) with Lp sharded over the
-    stage axis; shared-site leaves (K, M, S*slots, mb_global, ...).
+    Dense layout: layer leaves (K, M, Lp, mb_global, ...) with Lp sharded
+    over the stage axis; shared-site leaves (K, M, S*slots, mb_global, ...).
+    Paged layout (``eng.paged``): one block *pool* per (trial, layer) shared
+    by every slot cell — leaves (K, Lp, n_blocks, block_size, h_kv, hd) with
+    the n_blocks axis sharded over the data/pod axes (each shard's rows
+    reach only its own pool slice, via local ids in the block tables).
     """
     plan = plan_stages(cfg, eng.n_stages)
+    if eng.paged:
+        _check_paged_support(cfg, eng)
+        layers = {
+            "k": jax.ShapeDtypeStruct(
+                (eng.n_trials, plan.padded_layers, eng.n_blocks,
+                 eng.block_size, cfg.n_kv_heads, cfg.head_dim),
+                eng.cache_dtype),
+            "v": jax.ShapeDtypeStruct(
+                (eng.n_trials, plan.padded_layers, eng.n_blocks,
+                 eng.block_size, cfg.n_kv_heads, cfg.head_dim),
+                eng.cache_dtype),
+        }
+        tree = {"layers": layers, "shared": None}
+        if dry_run:
+            return tree
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), tree)
     mb_global = eng.microbatch * (1 if eng.batch_replicated
                                   else eng.data_size * eng.pod_size)
     one = BLK.layer_cache_shape(cfg, mb_global, eng.max_seq, eng.cache_dtype)
@@ -636,6 +675,10 @@ def serve_cache_struct(cfg: ArchConfig, eng: EngineConfig,
 def serve_cache_pspecs(cfg: ArchConfig, eng: EngineConfig):
     st = eng.stage_axis
     batch_ax = None if eng.batch_replicated else eng.dp_axes
+    if eng.paged:
+        # pool: layers over stages, blocks over the data/pod axes
+        spec = P(None, st, batch_ax, None, None, None)
+        return {"layers": {"k": spec, "v": spec}, "shared": None}
     plan = plan_stages(cfg, eng.n_stages)
     one = BLK.layer_cache_shape(cfg, 1, max(eng.max_seq, 1), eng.cache_dtype)
     layers = jax.tree.map(
@@ -666,8 +709,16 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
     All modes accept an optional ``batch["active"]`` (K,M,mb) bool row mask:
     inactive rows compute (SPMD shapes are static) but their cache rows are
     left untouched, so idle slots can ride along in a live batch.
+    ``eng.paged`` (append/decode only): the cache holds per-layer block pools
+    and batch additionally carries ``block_tables`` (K,M,mb,max_blocks) int32
+    local physical ids; K/V writes scatter through the tables and reads
+    gather each row's logical view (blocks.paged_kv_update), so the live HBM
+    cache footprint is the pool, not slots × max_seq.
     Returns (new_cache, tokens_out (K,M,mb), logit_max (K,M,mb)).
     """
+    if eng.paged and mode not in ("append", "decode"):
+        raise ValueError(f"paged serving supports append/decode only, "
+                         f"got mode={mode!r}")
     S = eng.n_stages
     K, M = eng.n_trials, eng.n_microbatches
     plan = plan_stages(cfg, S)
@@ -791,6 +842,30 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
                 kv_off = _take2({"p": batch["positions"]}, k_cur, m_cur)["p"]
             elif nc > 1:
                 kv_off = jnp.full((mb,), chunk_of(m_cur) * qlen, jnp.int32)
+            if eng.paged:
+                # the pool is shared across slots: slice per trial only, and
+                # gate writes (idle rows, bubble ticks) inside the scatter —
+                # a where-style masked write-back would race rows that share
+                # the pool leaf
+                rows = slot_rows_active(k_cur, m_cur)
+                wm = jnp.broadcast_to(valid_cur, (mb,))
+                if rows is not None:
+                    wm = wm & rows
+                c_slice = {"layers": _take1(cache["layers"], k_cur),
+                           "shared": None}
+                bt = _take2({"b": batch["block_tables"]}, k_cur, m_cur)["b"]
+                y, c_new, _ = lm.stack_apply(
+                    cfg, opts, p_layers, x_in, pos=slot_pos(slot_cur),
+                    mode=stack_mode, cache=c_slice, shared_params=shared,
+                    layer_mask=layer_mask, layer_offset=layer_offset,
+                    kv_offset=kv_off, window=eng.window,
+                    layer_param_fn=gather_fn, block_tables=bt, write_mask=wm)
+                new_layers = jax.tree.map(
+                    lambda buf, new: lax.dynamic_update_slice(
+                        buf, new[None].astype(buf.dtype),
+                        (k_cur,) + (0,) * (buf.ndim - 1)),
+                    cache["layers"], c_new["layers"])
+                return y, {"layers": new_layers, "shared": None}
             c_slice = slot_cache(cache, k_cur, m_cur)
             y, c_new, _ = lm.stack_apply(
                 cfg, opts, p_layers, x_in, pos=slot_pos(slot_cur),
@@ -876,6 +951,11 @@ def make_serve_step(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
     if with_active:
         bspecs["active"] = P(None, None,
                              None if eng.batch_replicated else eng.dp_axes)
+    if eng.paged:
+        # (K, M, mb_global, max_blocks) local physical ids, rows sharded
+        # with the batch so each shard sees only tables into its pool slice
+        bspecs["block_tables"] = P(
+            None, None, None if eng.batch_replicated else eng.dp_axes, None)
     cspecs = serve_cache_pspecs(cfg, eng)
     batch_ax = P() if eng.batch_replicated else P(None, None, eng.dp_axes)
 
@@ -900,7 +980,13 @@ def make_slot_reset(cfg: ArchConfig, eng: EngineConfig, mesh,
     tick their request finishes, before a queued request is admitted into the
     freed slot. KV rows beyond kv_len are never attended, but SSM/conv states
     are recurrent and MUST restart from zero for the next request.
+    (Paged engines never call this: paged serving is attention-only, stale
+    pool blocks are masked by kv_len, and freed blocks return to the
+    allocator host-side.)
     """
+    if eng.paged:
+        raise ValueError("paged caches need no slot reset (no recurrent "
+                         "state; stale blocks are masked via kv_len)")
     cspecs = serve_cache_pspecs(cfg, eng)
     mspec = P(None, None, None if eng.batch_replicated else eng.dp_axes)
 

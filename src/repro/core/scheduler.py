@@ -17,8 +17,10 @@ import dataclasses
 import math
 from typing import Optional, Sequence
 
-from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core.partitioner import layer_flops_per_token, plan_stages
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.partitioner import plan_stages
 from repro.core.pipeline import EngineConfig
 
 # TPU v5e (the deployment target; see EXPERIMENTS.md §Roofline)
@@ -86,22 +88,38 @@ def per_chip_bytes(cfg: ArchConfig, eng: EngineConfig, seq_len: int,
     return MemoryEstimate(params_b, opt_b, act_b, cache_b)
 
 
+def kv_token_bytes_per_chip(cfg: ArchConfig, eng: EngineConfig) -> int:
+    """K+V bytes ONE cached token costs across this chip's layer slice
+    (2 tensors × the engine's cache dtype)."""
+    plan = plan_stages(cfg, eng.n_stages)
+    itemsize = jnp.dtype(eng.cache_dtype).itemsize
+    return (cfg.n_kv_heads * cfg.head_dim * 2 * itemsize
+            * plan.layers_per_stage)
+
+
 def _cache_bytes_per_chip(cfg: ArchConfig, eng: EngineConfig,
                           seq_len: int) -> int:
+    if eng.paged:
+        # the persistent cache is the block pool, not slots × max_seq strips
+        dp = 1 if eng.batch_replicated else eng.data_size * eng.pod_size
+        local_blocks = eng.n_blocks // max(dp, 1)
+        return (local_blocks * eng.block_size
+                * kv_token_bytes_per_chip(cfg, eng))
     plan = plan_stages(cfg, eng.n_stages)
     b_local = eng.microbatch * eng.n_microbatches
     if cfg.family in ("ssm", "hybrid"):
         s = cfg.ssm
         di = s.d_inner(cfg.d_model)
+        itemsize = jnp.dtype(eng.cache_dtype).itemsize
         per_layer = b_local * di * s.d_state * 4  # fp32 state
-        per_layer += b_local * (s.d_conv - 1) * di * 2
+        per_layer += b_local * (s.d_conv - 1) * di * itemsize
         total = per_layer * plan.layers_per_stage
         if cfg.hybrid is not None:
             w = min(seq_len, eng.window) if eng.window else seq_len
-            total += b_local * w * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+            total += (b_local * w * cfg.n_kv_heads * cfg.head_dim * 2
+                      * itemsize)
         return total
-    per_layer = b_local * seq_len * cfg.n_kv_heads * cfg.head_dim * 2 * 2
-    return per_layer * plan.layers_per_stage
+    return b_local * seq_len * kv_token_bytes_per_chip(cfg, eng)
 
 
 def max_concurrent_trials(cfg: ArchConfig, eng: EngineConfig, seq_len: int,
@@ -120,25 +138,66 @@ def max_concurrent_trials(cfg: ArchConfig, eng: EngineConfig, seq_len: int,
 
 def plan_serve_capacity(cfg: ArchConfig, base_eng: EngineConfig,
                         max_seq: int, target_bubble: float = 0.25,
-                        max_slots: int = 64) -> EngineConfig:
+                        max_slots: int = 64, paged: bool = False,
+                        expected_seq: Optional[int] = None,
+                        block_size: int = 16,
+                        hbm_bytes: Optional[int] = None,
+                        budget_fraction: float = HBM_BUDGET_FRACTION,
+                        ) -> EngineConfig:
     """Choose the serving slot count M (``n_microbatches``) for one model.
 
-    Serving is forward-only, so ``per_chip_bytes(train=False)`` applies: the
-    KV/SSM cache at ``max_seq`` is the marginal HBM cost per slot. Start from
-    the pipeline-bubble target ((S-1)/(M+S-1) <= target with K=1 — more slots
-    = more concurrent requests = smaller bubble, Hydra's slot-filling insight
-    applied to serving), then shrink M until the cache fits the budget.
+    Dense path: serving is forward-only, so ``per_chip_bytes(train=False)``
+    applies — the KV/SSM cache at ``max_seq`` is the marginal HBM cost per
+    slot (admission is by *worst case*: every cell reserves a full strip).
+    Start from the pipeline-bubble target ((S-1)/(M+S-1) <= target with K=1 —
+    more slots = more concurrent requests = smaller bubble, Hydra's
+    slot-filling insight applied to serving), then shrink M until the cache
+    fits the budget.
+
+    Paged path (``paged=True``): the leftover budget becomes one shared
+    block pool per chip, and M is sized so the pool backs M × microbatch
+    rows at their *expected* length (``expected_seq``, default max_seq/2) —
+    admission by expectation instead of worst case, which is where the
+    capacity win over the dense plan comes from. The returned config carries
+    ``n_blocks``/``block_size``; the runtime batcher keeps the plan
+    preemption-free by committing each admitted request's exact block need
+    against the pool and deferring admission when it would not fit
+    (overcommit headroom is a batcher knob, see serve/paging.py).
     """
+    budget = (HBM_BYTES_PER_CHIP if hbm_bytes is None
+              else hbm_bytes) * budget_fraction
     s = base_eng.n_stages
     if s > 1:
         m_bubble = math.ceil((s - 1) * (1.0 - target_bubble)
                              / max(target_bubble, 1e-9))
     else:
         m_bubble = 1
+    if paged:
+        eng = dataclasses.replace(base_eng, n_trials=1, max_seq=max_seq,
+                                  paged=True, block_size=block_size,
+                                  n_blocks=0, n_microbatches=1)
+        est = per_chip_bytes(cfg, eng, max_seq, train=False)
+        fixed = est.params_bytes + est.opt_bytes + est.act_bytes
+        token_b = kv_token_bytes_per_chip(cfg, eng)
+        dp = 1 if eng.batch_replicated else eng.data_size * eng.pod_size
+        # (ceil-div mirrors serve/paging.py::blocks_for; core/ stays below
+        # serve/ in the layering so it is not imported here)
+        per_row = -(-max_seq // block_size)
+        # floor: one partition must back a full max_seq request, or the
+        # batcher would hard-reject in-spec traffic at enqueue time
+        local_blocks = max(int(budget - fixed) // (token_b * block_size),
+                           per_row)
+        exp = min(max(expected_seq or max_seq // 2, 1), max_seq)
+        m_cap = (local_blocks * block_size) // (exp * eng.microbatch)
+        m = min(max_slots, max(1, m_cap))
+        # blocks beyond the capped grid's worst case are dead weight (every
+        # cell fully backed at max_seq) — return them to the budget
+        local_blocks = min(local_blocks, max(eng.microbatch * m, 1) * per_row)
+        return dataclasses.replace(eng, n_microbatches=m,
+                                   n_blocks=local_blocks * dp)
     m = min(max(m_bubble, base_eng.n_microbatches, 1), max_slots)
     eng = dataclasses.replace(base_eng, n_trials=1, n_microbatches=m,
                               max_seq=max_seq)
-    budget = HBM_BYTES_PER_CHIP * HBM_BUDGET_FRACTION
     while (per_chip_bytes(cfg, eng, max_seq, train=False).total > budget
            and eng.n_microbatches > 1):
         eng = dataclasses.replace(eng, n_microbatches=eng.n_microbatches - 1)

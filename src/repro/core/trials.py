@@ -11,7 +11,7 @@ import dataclasses
 import itertools
 import math
 import random
-from typing import Iterable, Optional, Sequence
+from typing import Optional, Sequence
 
 from repro.core.scheduler import TrialSpec
 

@@ -2,7 +2,6 @@
 allclose sweeps in tests/test_kernels_*.py)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

@@ -29,8 +29,8 @@ from repro.core import scheduler as sched
 from repro.core.partitioner import plan_stages
 from repro.launch.mesh import make_test_mesh
 from repro.models.layers import ModelOptions
-from repro.serve import (Request, ServeEngine, load_trace, poisson_trace,
-                         static_serve)
+from repro.serve import (Request, ServeEngine, blocks_for, load_trace,
+                         poisson_trace, static_serve)
 
 
 def build_args():
@@ -58,12 +58,32 @@ def build_args():
     ap.add_argument("--prefill-chunks", type=int, default=2)
     ap.add_argument("--static", action="store_true",
                     help="run the lockstep static-batch baseline instead")
+    cache = ap.add_mutually_exclusive_group()
+    cache.add_argument("--paged", action="store_true",
+                       help="paged KV-cache: shared block pool + per-request "
+                       "block tables (admit by expected length)")
+    cache.add_argument("--dense", action="store_true",
+                       help="dense per-slot cache strips (the default)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (--paged)")
+    ap.add_argument("--n-blocks", type=int, default=0,
+                    help="global block-pool size (--paged with explicit "
+                    "--slots; 0 = back every cell at max_seq)")
+    ap.add_argument("--expected-seq", type=int, default=0,
+                    help="expected request length for paged capacity "
+                    "planning (0 = max_seq/2)")
+    ap.add_argument("--overcommit", type=float, default=1.0,
+                    help="paged admission headroom: commit up to this "
+                    "fraction of the pool (1.0 = preemption-free)")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 
 
 def main():
     args = build_args().parse_args()
+    if args.paged and args.static:
+        raise SystemExit("--static is the dense lockstep baseline; "
+                         "drop --paged")
     mesh = make_test_mesh(args.n_data, args.n_model)
     cfg = get_config(args.arch)
     if args.smoke:
@@ -74,13 +94,29 @@ def main():
         n_trials=1, n_microbatches=max(args.slots, 1),
         microbatch=args.microbatch, n_stages=args.n_model,
         data_size=args.n_data, max_seq=max_seq, cache_dtype=jnp.float32,
-        prefill_chunks=args.prefill_chunks)
+        prefill_chunks=args.prefill_chunks, paged=args.paged,
+        block_size=args.block_size)
     if args.slots <= 0:
-        planned = sched.plan_serve_capacity(cfg, base, max_seq)
+        planned = sched.plan_serve_capacity(
+            cfg, base, max_seq, paged=args.paged,
+            expected_seq=args.expected_seq or None,
+            block_size=args.block_size, max_slots=args.max_slots)
         slots = min(planned.n_microbatches, args.max_slots)
         print(f"capacity plan: {planned.n_microbatches} slots fit the HBM "
-              f"budget; using {slots}")
-        base = dataclasses.replace(base, n_microbatches=slots)
+              f"budget; using {slots}"
+              + (f" (pool: {planned.n_blocks} x {planned.block_size}-token "
+                 f"blocks)" if args.paged else ""))
+        base = dataclasses.replace(base, n_microbatches=slots,
+                                   n_blocks=planned.n_blocks)
+    elif args.paged:
+        n_blocks = args.n_blocks
+        if n_blocks <= 0:
+            # default pool: back every cell at max_seq (worst case — still
+            # paged mechanics; shrink with --n-blocks to see backpressure)
+            dp = args.n_data
+            per_row = blocks_for(max_seq, args.block_size)
+            n_blocks = args.microbatch * args.slots * per_row * dp
+        base = dataclasses.replace(base, n_blocks=n_blocks)
     eng = base
 
     if args.trace:
@@ -125,10 +161,11 @@ def main():
                                           opts)
         mode = "static"
     else:
-        engine = ServeEngine(cfg, eng, mesh, params, opts)
+        engine = ServeEngine(cfg, eng, mesh, params, opts,
+                             overcommit=args.overcommit)
         completions = engine.run(requests)
         stats = engine.stats
-        mode = "continuous"
+        mode = "continuous/paged" if args.paged else "continuous"
 
     for c in completions[:8]:
         print(f"  req[{c.rid}] plen={c.prompt_len} queue={c.queue_ticks:.1f} "
@@ -141,6 +178,10 @@ def main():
           f"({s['tokens_per_s']} tok/s on this host)")
     print(f"slot occupancy {s['slot_occupancy']}, "
           f"decode occupancy {s['decode_occupancy']}")
+    if args.paged:
+        print(f"block pool: {eng.n_blocks} x {eng.block_size}-token blocks, "
+              f"peak in use {s.get('peak_blocks_in_use', 0)}, "
+              f"pool stalls {s.get('pool_stalls', 0)}")
 
 
 if __name__ == "__main__":

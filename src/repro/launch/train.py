@@ -13,12 +13,10 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import REGISTRY
 from repro.core import pipeline as pl
 from repro.core.hydra import HydraConfig, run_model_selection
-from repro.core.scheduler import TrialSpec
 from repro.core.trials import SuccessiveHalving, grid_search
 from repro.launch.mesh import make_test_mesh
 from repro.models.layers import ModelOptions

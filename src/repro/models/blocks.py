@@ -28,10 +28,60 @@ from repro.models.layers import ModelOptions
 # ---------------------------------------------------------------------------
 
 
+def paged_kv_update(cache, k, v, block_tables, kv_offset, write_mask=None):
+    """Scatter a (b, s) chunk of new K/V into the shared block pool and
+    gather each row's full logical cache view back out through its table.
+
+    cache {'k','v'}: (n_blocks, block_size, h_kv, hd) — the *pool*, shared by
+    every row (no batch axis). block_tables (b, max_blocks) int32 physical ids
+    local to this shard's pool slice, -1 = unallocated. kv_offset (b,) is the
+    row's cache depth (tokens already written). Rows with ``write_mask``
+    False — idle cells riding along, or pipeline bubble ticks — write nothing
+    (their scatter indices are pushed out of bounds and dropped); the
+    allocator guarantees live rows' blocks are disjoint, so the scatters
+    never collide. Returns (new_cache, k_rows, v_rows) where k_rows/v_rows
+    are (b, max_blocks*block_size, h_kv, hd) gathered views whose garbage
+    tail (unallocated blocks / stale tokens) the caller masks via kv_len.
+    """
+    b, s = k.shape[0], k.shape[1]
+    nb, bs = cache["k"].shape[0], cache["k"].shape[1]
+    max_blocks = block_tables.shape[1]
+    pool_k = cache["k"].reshape(nb * bs, *cache["k"].shape[2:])
+    pool_v = cache["v"].reshape(nb * bs, *cache["v"].shape[2:])
+    # scatter the chunk: token i of row r lands in block table[r, p//bs] at
+    # in-block slot p%bs, p = kv_offset[r] + i
+    pos = kv_offset[:, None] + jnp.arange(s)[None, :]  # (b, s)
+    blk = jnp.clip(pos // bs, 0, max_blocks - 1)
+    phys = jnp.take_along_axis(block_tables, blk, axis=1)  # (b, s)
+    ok = phys >= 0
+    if write_mask is not None:
+        ok = ok & write_mask[:, None]
+    flat = jnp.where(ok, phys * bs + pos % bs, nb * bs)  # OOB -> dropped
+    pool_k = pool_k.at[flat.reshape(-1)].set(
+        k.reshape(b * s, *k.shape[2:]).astype(pool_k.dtype), mode="drop")
+    pool_v = pool_v.at[flat.reshape(-1)].set(
+        v.reshape(b * s, *v.shape[2:]).astype(pool_v.dtype), mode="drop")
+    # gather each row's logical view: position j reads block table[r, j//bs]
+    span = (jnp.clip(block_tables, 0, nb - 1)[:, :, None] * bs
+            + jnp.arange(bs)[None, None, :]).reshape(b, max_blocks * bs)
+    k_rows = jnp.take(pool_k, span, axis=0)
+    v_rows = jnp.take(pool_v, span, axis=0)
+    new_cache = {"k": pool_k.reshape(cache["k"].shape),
+                 "v": pool_v.reshape(cache["v"].shape)}
+    return new_cache, k_rows, v_rows
+
+
 def attn_apply(cfg: ArchConfig, opts: ModelOptions, p, x, *, pos,
                cache=None, kv_offset=None, mode: str = "train",
-               window: int = 0, causal: bool = True):
-    """x (b, s, d) -> (b, s, d); cache {'k','v'}: (b, S_max, h_kv, hd)."""
+               window: int = 0, causal: bool = True, block_tables=None,
+               write_mask=None):
+    """x (b, s, d) -> (b, s, d); cache {'k','v'}: (b, S_max, h_kv, hd).
+
+    ``block_tables`` switches the append/decode cache handling to the paged
+    pool layout (see :func:`paged_kv_update`): cache is then the shared
+    (n_blocks, block_size, h_kv, hd) pool and ``write_mask`` gates which rows
+    may write this call.
+    """
     b, s, d = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, s, h, hd)
@@ -57,6 +107,16 @@ def attn_apply(cfg: ArchConfig, opts: ModelOptions, p, x, *, pos,
                 cache["v"].dtype),
         }
         out = L.attention(q, k, v, causal=causal, window=window, opts=opts)
+    elif mode == "append" and block_tables is not None:
+        # paged chunked prefill: same semantics as the dense append below but
+        # K/V live in the shared block pool, reached through per-row tables
+        new_cache, kf, vf = paged_kv_update(cache, k, v, block_tables,
+                                            kv_offset, write_mask)
+        kv_len = jnp.minimum(kv_offset + s, kf.shape[1])
+        out = L.attention(
+            q, kf.astype(q.dtype), vf.astype(q.dtype),
+            causal=True, window=window, kv_offset=kv_offset,
+            kv_len=kv_len, opts=opts)
     elif mode == "append":
         # chunked prefill: insert a whole chunk at kv_offset and attend over
         # the cache prefix + causally within the chunk (kv_offset handles the
@@ -75,6 +135,15 @@ def attn_apply(cfg: ArchConfig, opts: ModelOptions, p, x, *, pos,
             q, new_cache["k"].astype(q.dtype), new_cache["v"].astype(q.dtype),
             causal=True, window=window, kv_offset=kv_offset,
             kv_len=kv_len, opts=opts)
+    elif mode == "decode" and block_tables is not None:
+        # paged decode: one-token append through the table, then the same
+        # masked-full-cache attention the dense decode runs
+        new_cache, kf, vf = paged_kv_update(cache, k, v, block_tables,
+                                            kv_offset, write_mask)
+        kv_len = jnp.minimum(kv_offset + 1, kf.shape[1])
+        out = L.attention(
+            q, kf.astype(q.dtype), vf.astype(q.dtype),
+            causal=False, window=0, kv_offset=0, kv_len=kv_len, opts=opts)
     elif mode == "decode":
         # ring-buffer insert: slot = kv_offset mod cache_len (identity for
         # unwindowed caches, rolling slot for sliding-window caches)
@@ -103,7 +172,8 @@ def attn_apply(cfg: ArchConfig, opts: ModelOptions, p, x, *, pos,
 
 
 def dense_block(cfg, opts, p, x, *, pos, cache=None, kv_offset=None,
-                mode="train", window: int = 0):
+                mode="train", window: int = 0, block_tables=None,
+                write_mask=None):
     causal = cfg.family != "encoder"
     if cfg.family == "encoder":
         h = L.layer_norm(x, p["ln1_w"], p["ln1_b"], cfg.norm_eps)
@@ -111,7 +181,8 @@ def dense_block(cfg, opts, p, x, *, pos, cache=None, kv_offset=None,
         h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
     a, new_cache = attn_apply(cfg, opts, p["attn"], h, pos=pos, cache=cache,
                               kv_offset=kv_offset, mode=mode, window=window,
-                              causal=causal)
+                              causal=causal, block_tables=block_tables,
+                              write_mask=write_mask)
     x = x + a
     if cfg.family == "encoder":
         h = L.layer_norm(x, p["ln2_w"], p["ln2_b"], cfg.norm_eps)
@@ -122,10 +193,13 @@ def dense_block(cfg, opts, p, x, *, pos, cache=None, kv_offset=None,
 
 
 def moe_block(cfg, opts, p, x, *, pos, cache=None, kv_offset=None,
-              mode="train", window: int = 0):
+              mode="train", window: int = 0, block_tables=None,
+              write_mask=None):
     h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
     a, new_cache = attn_apply(cfg, opts, p["attn"], h, pos=pos, cache=cache,
-                              kv_offset=kv_offset, mode=mode, window=window)
+                              kv_offset=kv_offset, mode=mode, window=window,
+                              block_tables=block_tables,
+                              write_mask=write_mask)
     x = x + a
     h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
     m, aux = L.moe_apply(p["moe"], h, n_experts=cfg.moe.n_experts,
@@ -136,8 +210,11 @@ def moe_block(cfg, opts, p, x, *, pos, cache=None, kv_offset=None,
 
 
 def ssm_block(cfg, opts, p, x, *, pos, cache=None, kv_offset=None,
-              mode="train", window: int = 0):
-    """Mamba1 block (falcon-mamba): norm -> mamba -> residual."""
+              mode="train", window: int = 0, block_tables=None,
+              write_mask=None):
+    """Mamba1 block (falcon-mamba): norm -> mamba -> residual.
+    (``block_tables``/``write_mask`` are accepted for signature uniformity;
+    recurrent state is O(1) per row and never paged.)"""
     h = L.rms_norm(x, p["ln"], cfg.norm_eps)
     ssm_s = cache["ssm"] if cache is not None else None
     conv_s = cache["conv"] if cache is not None else None
@@ -150,8 +227,10 @@ def ssm_block(cfg, opts, p, x, *, pos, cache=None, kv_offset=None,
 
 
 def hybrid_backbone_block(cfg, opts, p, x, *, pos, cache=None, kv_offset=None,
-                          mode="train", window: int = 0):
-    """Zamba2 backbone layer: Mamba2 mixer."""
+                          mode="train", window: int = 0, block_tables=None,
+                          write_mask=None):
+    """Zamba2 backbone layer: Mamba2 mixer. (Paging kwargs unused: the
+    recurrent state is O(1) per row.)"""
     h = L.rms_norm(x, p["ln"], cfg.norm_eps)
     ssm_s = cache["ssm"] if cache is not None else None
     conv_s = cache["conv"] if cache is not None else None

@@ -9,7 +9,6 @@ per stage.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Optional
 

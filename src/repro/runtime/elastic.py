@@ -11,7 +11,7 @@ pipeline keeps gradients identical (global batch re-sharded, not re-sized).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax
 import numpy as np

@@ -8,3 +8,8 @@ from repro.serve.request import (  # noqa: F401
 )
 from repro.serve.batcher import Batcher, Slot  # noqa: F401
 from repro.serve.engine import ServeEngine, static_serve  # noqa: F401
+from repro.serve.paging import (  # noqa: F401
+    BlockAllocator,
+    BlockTable,
+    blocks_for,
+)

@@ -17,6 +17,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.serve.paging import BlockAllocator, BlockTable, blocks_for
 from repro.serve.request import Request
 
 
@@ -31,6 +32,8 @@ class Slot:
     chunks: list = dataclasses.field(default_factory=list)  # pending prompt
     generated: list = dataclasses.field(default_factory=list)
     admitted_tick: int = -1
+    table: Optional[BlockTable] = None  # paged: this request's block table
+    block_commit: int = 0  # paged: exact blocks this request will peak at
 
     @property
     def free(self) -> bool:
@@ -55,20 +58,51 @@ class Slot:
         self.chunks = []
         self.generated = []
         self.admitted_tick = -1
+        if self.table is not None:  # free-on-completion
+            self.table.close()
+            self.table = None
+        self.block_commit = 0
 
 
 class Batcher:
-    """FCFS admission of queued requests into free slot cells."""
+    """FCFS admission of queued requests into free slot cells.
+
+    With a :class:`BlockAllocator` (paged serving), admission additionally
+    commits each request's exact block footprint (generation always runs to
+    its budget, so ``blocks_for(total_len)`` is known at admission) against
+    its pool partition and defers — backpressure — when the committed total
+    would exceed ``blocks_per_partition × overcommit``. At the default
+    overcommit of 1.0 the schedule is preemption-free: every later
+    alloc-on-append is covered by its commitment and can never stall.
+    ``rows_per_partition`` maps batch row b to pool partition
+    b // rows_per_partition (the data/pod shard holding that row).
+    """
 
     def __init__(self, n_microbatches: int, mb_global: int,
-                 prefill_chunks: int, max_seq: int):
+                 prefill_chunks: int, max_seq: int,
+                 allocator: Optional[BlockAllocator] = None,
+                 rows_per_partition: int = 0, overcommit: float = 1.0):
         self.n_microbatches = n_microbatches
         self.mb_global = mb_global
         self.prefill_chunks = max(1, prefill_chunks)
         self.max_seq = max_seq
+        self.allocator = allocator
+        self.rows_per_partition = rows_per_partition
+        self.overcommit = overcommit
         self.slots = [Slot(m, b) for m in range(n_microbatches)
                       for b in range(mb_global)]
         self.queue: deque = deque()
+
+    def partition_of(self, b: int) -> int:
+        if self.allocator is None or self.rows_per_partition <= 0:
+            return 0
+        return min(b // self.rows_per_partition,
+                   self.allocator.n_partitions - 1)
+
+    def committed_blocks(self, partition: int) -> int:
+        """Blocks promised to live requests in one pool partition."""
+        return sum(s.block_commit for s in self.slots
+                   if not s.free and self.partition_of(s.b) == partition)
 
     # -- queue ---------------------------------------------------------------
 
@@ -78,6 +112,20 @@ class Batcher:
                 f"request {req.rid}: prompt_len + max_new_tokens - 1 = "
                 f"{req.total_len} exceeds the engine cache length "
                 f"{self.max_seq}")
+        if self.allocator is not None:
+            need = blocks_for(req.total_len, self.allocator.block_size)
+            # a request can never be admitted past the physical partition
+            # size OR past the admission limit (overcommit < 1 lowers it)
+            ceiling = min(self.allocator.blocks_per_partition,
+                          int(self.allocator.blocks_per_partition
+                              * self.overcommit))
+            if need > ceiling:
+                raise ValueError(
+                    f"request {req.rid}: needs {need} blocks but admission "
+                    f"is capped at {ceiling} per pool partition "
+                    f"(blocks_per_partition="
+                    f"{self.allocator.blocks_per_partition}, overcommit="
+                    f"{self.overcommit}) — it could never be admitted")
         self.queue.append(req)
 
     # -- admission -----------------------------------------------------------
@@ -90,12 +138,41 @@ class Batcher:
 
     def admit(self, now: float) -> list:
         """Move queued requests (arrival <= now) into free cells, FCFS.
-        Returns the newly admitted slots."""
+
+        Paged: the head request is placed in the free cell whose pool
+        partition has the most free blocks, and admission stops (defers —
+        the queue keeps FCFS order) as soon as the head's exact block
+        commitment fits no partition. Returns the newly admitted slots.
+        """
         admitted = []
         free = [s for s in self.slots if s.free]
         while free and self.queue and self.queue[0].arrival <= now:
-            req = self.queue.popleft()
-            slot = free.pop(0)
+            req = self.queue[0]
+            if self.allocator is None:
+                slot = free.pop(0)
+            else:
+                commit = blocks_for(req.total_len, self.allocator.block_size)
+                limit = int(self.allocator.blocks_per_partition
+                            * self.overcommit)
+                # balance by *committed* blocks, not the allocator's free
+                # count — commitments from requests admitted earlier this
+                # round have not allocated yet but already claim their pool
+                free.sort(key=lambda s: (
+                    self.committed_blocks(self.partition_of(s.b)),
+                    s.m, s.b))
+                slot = None
+                for cand in free:
+                    p = self.partition_of(cand.b)
+                    if self.committed_blocks(p) + commit <= limit:
+                        slot = cand
+                        break
+                if slot is None:  # pool backpressure: defer admission
+                    break
+                free.remove(slot)
+                slot.table = BlockTable(self.allocator,
+                                        self.partition_of(slot.b))
+                slot.block_commit = commit
+            self.queue.popleft()
             slot.request = req
             slot.pos = 0
             slot.chunks = self.split_chunks(req.prompt)

@@ -17,6 +17,23 @@ pipelined serve step, owning one KV/SSM-cache row):
    │    restart from zero)                                                │
    └──────────────────────────────────────────────────────────────────────┘
 
+Paged mode (``eng.paged``) replaces the per-cell dense cache strips with one
+shared block pool per layer (``serve/paging.py``); the cache column of the
+lifecycle becomes block-table bookkeeping:
+
+  FREE ──admit──► PREFILL ──last chunk──► DECODE ──budget hit──► FREE
+   ▲   (admission defers — backpressure —     (crossing a block boundary  │
+   │    until the request's exact block        allocs one block:          │
+   │    commitment fits the pool; each         alloc-on-append)           │
+   │    prefill chunk grows the cell's                                    │
+   │    block table; no cache zeroing —                                   │
+   │    stale blocks are masked by kv_len)                                │
+   └────────────── blocks returned to the allocator's free list ──────────┘
+
+Short requests then stop reserving ``max_seq``-worst-case HBM, so
+``plan_serve_capacity(paged=True)`` packs strictly more concurrent cells
+into the same budget (admission by *expected* length against the pool).
+
 * **Admission / chunked prefill.** A prompt is split into
   ``EngineConfig.prefill_chunks`` near-equal chunks; each engine round
   advances every prefilling cell by one chunk via the ``append`` serve step
@@ -46,9 +63,9 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import pipeline as pl
-from repro.core.partitioner import plan_stages
 from repro.models.layers import ModelOptions
 from repro.serve.batcher import Batcher
+from repro.serve.paging import BlockAllocator, blocks_for
 from repro.serve.request import Completion, Request
 
 
@@ -61,8 +78,11 @@ class ServeStats:
     tokens_generated: int = 0
     prompt_tokens: int = 0
     wall_s: float = 0.0
+    peak_live: int = 0  # max concurrently admitted requests (capacity used)
+    pool_stalls: int = 0  # paged: row-rounds deferred on an exhausted pool
     occupancy_samples: list = dataclasses.field(default_factory=list)
     decode_busy_samples: list = dataclasses.field(default_factory=list)
+    block_usage_samples: list = dataclasses.field(default_factory=list)
 
     @property
     def slot_occupancy(self) -> float:
@@ -84,12 +104,17 @@ class ServeStats:
         return self.tokens_generated / self.wall_s if self.wall_s > 0 else 0.0
 
     def summary(self) -> dict:
-        return {"ticks": self.ticks, "calls": self.calls,
-                "tokens_generated": self.tokens_generated,
-                "prompt_tokens": self.prompt_tokens,
-                "slot_occupancy": round(self.slot_occupancy, 4),
-                "decode_occupancy": round(self.decode_occupancy, 4),
-                "tokens_per_s": round(self.tokens_per_s, 2)}
+        out = {"ticks": self.ticks, "calls": self.calls,
+               "tokens_generated": self.tokens_generated,
+               "prompt_tokens": self.prompt_tokens,
+               "peak_live": self.peak_live,
+               "slot_occupancy": round(self.slot_occupancy, 4),
+               "decode_occupancy": round(self.decode_occupancy, 4),
+               "tokens_per_s": round(self.tokens_per_s, 2)}
+        if self.block_usage_samples:
+            out["peak_blocks_in_use"] = int(max(self.block_usage_samples))
+            out["pool_stalls"] = self.pool_stalls
+        return out
 
 
 class ServeEngine:
@@ -104,7 +129,8 @@ class ServeEngine:
     """
 
     def __init__(self, cfg: ArchConfig, eng: pl.EngineConfig, mesh, params,
-                 opts: Optional[ModelOptions] = None):
+                 opts: Optional[ModelOptions] = None,
+                 overcommit: float = 1.0):
         if cfg.rope == "mrope" or cfg.frontend is not None:
             raise ValueError("continuous batching supports text-only archs; "
                              "use the static path for mrope/frontend models")
@@ -125,11 +151,31 @@ class ServeEngine:
             cfg, self.opts, self.eng, mesh, "decode", with_active=True)
         self.append_step = pl.make_serve_step(
             cfg, self.opts, self.eng, mesh, "append", with_active=True)
-        self.reset_fn = pl.make_slot_reset(cfg, self.eng, mesh)
+        self.paged = bool(self.eng.paged)
+        self.allocator = None
+        if self.paged:
+            # one pool partition per data/pod shard: rows allocate only from
+            # the slice their shard owns (tables carry local ids)
+            n_parts = (1 if self.eng.batch_replicated
+                       else self.eng.data_size * self.eng.pod_size)
+            self.allocator = BlockAllocator(self.eng.n_blocks,
+                                            self.eng.block_size,
+                                            n_partitions=n_parts)
+            self.max_blocks = blocks_for(self.eng.max_seq,
+                                         self.eng.block_size)
+            # no slot reset: paged serving is attention-only (no recurrent
+            # state) and stale pool blocks are masked via kv_len
+            self.reset_fn = None
+        else:
+            self.reset_fn = pl.make_slot_reset(cfg, self.eng, mesh)
         self.cache = pl.serve_cache_struct(cfg, self.eng, dry_run=False)
         self.batcher = Batcher(self.eng.n_microbatches, self.mb_global,
-                               self.n_chunks, self.eng.max_seq)
+                               self.n_chunks, self.eng.max_seq,
+                               allocator=self.allocator,
+                               rows_per_partition=self.eng.microbatch,
+                               overcommit=overcommit)
         self.tick = 0
+        self._stalled_ticks = 0
         self.stats = ServeStats()
         self.completions: list = []
 
@@ -162,18 +208,36 @@ class ServeEngine:
             return False
         self.tick += 1
         self.stats.ticks += 1
+        calls_before = self.stats.calls
         admitted = self.batcher.admit(self.tick)
         if admitted:
-            self._reset_rows(admitted)
+            if not self.paged:
+                self._reset_rows(admitted)
             self.stats.prompt_tokens += sum(
                 s.request.prompt_len for s in admitted)
-        self.stats.occupancy_samples.append(
-            self.batcher.occupied() / self.batcher.n_cells)
+        occupied = self.batcher.occupied()
+        self.stats.peak_live = max(self.stats.peak_live, occupied)
+        self.stats.occupancy_samples.append(occupied / self.batcher.n_cells)
+        if self.allocator is not None:
+            self.stats.block_usage_samples.append(
+                self.allocator.used_blocks())
         for qlen, slots in sorted(self.batcher.prefill_groups().items()):
             self._prefill_call(qlen, slots)
         dec = self.batcher.decode_slots()
         if dec:
             self._decode_call(dec)
+        # overcommitted pools can stall every live row at a block boundary at
+        # once; there is no preemption, so flag the deadlock instead of
+        # spinning to max_ticks
+        if occupied and self.stats.calls == calls_before and not admitted:
+            self._stalled_ticks += 1
+            if self._stalled_ticks > 100:
+                raise RuntimeError(
+                    "engine stalled: block pool exhausted with every live "
+                    "row waiting for a block (overcommit too aggressive — "
+                    "lower it toward 1.0 or grow n_blocks)")
+        else:
+            self._stalled_ticks = 0
         return True
 
     # -- internals -----------------------------------------------------------
@@ -190,17 +254,40 @@ class ServeEngine:
             mask[0, s.m, s.b] = True
         self.cache = self.reset_fn(self.cache, jnp.asarray(mask))
 
+    def _block_tables(self, slots):
+        """(1, M, mb_global, max_blocks) int32 local ids; rows not in the
+        call stay -1 (their writes are dropped device-side anyway)."""
+        bt = np.full((1, self.eng.n_microbatches, self.mb_global,
+                      self.max_blocks), -1, np.int32)
+        for s in slots:
+            bt[0, s.m, s.b] = s.table.as_row(self.max_blocks)
+        return bt
+
+    def _ensure_blocks(self, slots, extra) -> list:
+        """Alloc-on-append: grow each slot's table to cover its next write.
+        Rows the pool cannot back right now are stalled (kept out of this
+        call, retried next round after completions free blocks)."""
+        if not self.paged:
+            return list(slots)
+        ready = [s for s in slots if s.table.ensure(s.pos + extra)]
+        self.stats.pool_stalls += len(slots) - len(ready)
+        return ready
+
     def _prefill_call(self, qlen: int, slots) -> None:
+        slots = self._ensure_blocks(slots, qlen)
+        if not slots:
+            return
         tokens, positions, active = self._grid(qlen)
         for s in slots:
             tokens[0, s.m, s.b] = s.chunks[0]
             positions[0, s.m, s.b] = s.pos
             active[0, s.m, s.b] = True
-        self.cache, tok, _ = self.append_step(
-            self.params, self.cache,
-            {"tokens": jnp.asarray(tokens),
-             "positions": jnp.asarray(positions),
-             "active": jnp.asarray(active)})
+        batch = {"tokens": jnp.asarray(tokens),
+                 "positions": jnp.asarray(positions),
+                 "active": jnp.asarray(active)}
+        if self.paged:
+            batch["block_tables"] = jnp.asarray(self._block_tables(slots))
+        self.cache, tok, _ = self.append_step(self.params, self.cache, batch)
         tok = np.asarray(tok)
         self.stats.calls += 1
         for s in slots:
@@ -212,16 +299,23 @@ class ServeEngine:
                 self._maybe_finish(s)
 
     def _decode_call(self, slots) -> None:
+        slots = self._ensure_blocks(slots, 1)
+        if not slots:
+            # a fully pool-stalled decode round is zero decode work, not a
+            # skipped sample — keep the occupancy metric honest
+            self.stats.decode_busy_samples.append(0.0)
+            return
         tokens, positions, active = self._grid(1)
         for s in slots:
             tokens[0, s.m, s.b, 0] = s.generated[-1]
             positions[0, s.m, s.b] = s.pos
             active[0, s.m, s.b] = True
-        self.cache, tok, _ = self.decode_step(
-            self.params, self.cache,
-            {"tokens": jnp.asarray(tokens),
-             "positions": jnp.asarray(positions),
-             "active": jnp.asarray(active)})
+        batch = {"tokens": jnp.asarray(tokens),
+                 "positions": jnp.asarray(positions),
+                 "active": jnp.asarray(active)}
+        if self.paged:
+            batch["block_tables"] = jnp.asarray(self._block_tables(slots))
+        self.cache, tok, _ = self.decode_step(self.params, self.cache, batch)
         tok = np.asarray(tok)
         self.stats.calls += 1
         self.stats.decode_busy_samples.append(
@@ -261,7 +355,10 @@ def static_serve(cfg: ArchConfig, eng: pl.EngineConfig, mesh, params,
     (completions, ServeStats).
     """
     opts = opts or ModelOptions()
-    eng = dataclasses.replace(eng, n_trials=1, prefill_chunks=1)
+    # the lockstep baseline keeps dense per-slot strips (it IS the worst-case
+    # reservation the paged engine is measured against)
+    eng = dataclasses.replace(eng, n_trials=1, prefill_chunks=1, paged=False,
+                              n_blocks=0)
     mb_global = eng.microbatch * (1 if eng.batch_replicated
                                   else eng.data_size * eng.pod_size)
     n_cells = eng.n_microbatches * mb_global

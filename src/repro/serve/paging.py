@@ -1,0 +1,166 @@
+"""Paged KV-cache bookkeeping: block pool, free-list allocator, block tables.
+
+The dense serve cache reserves one ``max_seq``-length strip per slot cell, so
+``plan_serve_capacity`` must admit by worst-case length and a short request
+strands the HBM behind its strip. Paging (vLLM-style) replaces the strips
+with one shared pool of fixed-size blocks per layer; each live request owns a
+*block table* — the ordered list of physical block ids backing its logical
+token positions — which grows one block at a time as chunked prefill and
+decode append tokens (alloc-on-append) and is returned to the free list the
+round the request completes (free-on-completion).
+
+Everything here is host-side scheduling state (plain Python, no jax): the
+device side consumes the tables as ``(rows, max_blocks)`` int32 arrays whose
+entries are *local* physical ids. When the batch rows are sharded over the
+data/pod axes, each shard owns an equal slice of the pool and the allocator
+is split into one **partition** per shard — rows allocate only from their
+shard's partition, so the ids written into the table index that shard's
+local pool slice directly and the SPMD kernel needs no id translation.
+
+Admission against the pool is *exact* in this engine (generation always runs
+to the request's ``max_new_tokens`` budget, so the final footprint is known
+at enqueue time): the batcher commits ``blocks_for(total_len)`` per live
+request and defers admission when the committed total would exceed the
+partition's pool — the backpressure that replaces worst-case ``max_seq``
+reservation. ``overcommit`` > 1 relaxes the committed-total gate (statistical
+packing); the allocator then backstops with per-append failures that stall a
+row until a completion frees blocks.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import List, Optional
+
+import numpy as np
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to back ``n_tokens`` cache rows."""
+    if n_tokens <= 0:
+        return 0
+    return -(-n_tokens // block_size)
+
+
+class BlockAllocator:
+    """Free-list allocator over a pool of ``n_blocks`` fixed-size blocks.
+
+    ``n_partitions`` > 1 splits the pool into equal per-data-shard slices;
+    every id handed out is local to its partition (0..n_blocks/P - 1).
+    Allocation is all-or-nothing and FIFO: freed blocks go to the tail of the
+    free list and are reused oldest-first, which keeps recycling deterministic
+    (tested) and spreads writes over the pool.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int, n_partitions: int = 1):
+        if n_blocks < 1 or block_size < 1 or n_partitions < 1:
+            raise ValueError("n_blocks, block_size, n_partitions must be >= 1")
+        if n_blocks % n_partitions:
+            raise ValueError(f"n_blocks={n_blocks} not divisible by "
+                             f"n_partitions={n_partitions}")
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self.n_partitions = n_partitions
+        self.blocks_per_partition = n_blocks // n_partitions
+        self._free = [deque(range(self.blocks_per_partition))
+                      for _ in range(n_partitions)]
+        self._live = [set() for _ in range(n_partitions)]
+
+    # -- queries -------------------------------------------------------------
+
+    def free_blocks(self, partition: Optional[int] = None) -> int:
+        if partition is None:
+            return sum(len(f) for f in self._free)
+        return len(self._free[partition])
+
+    def used_blocks(self, partition: Optional[int] = None) -> int:
+        if partition is None:
+            return sum(len(s) for s in self._live)
+        return len(self._live[partition])
+
+    def all_free(self) -> bool:
+        return self.used_blocks() == 0
+
+    # -- alloc / free --------------------------------------------------------
+
+    def alloc(self, n: int, partition: int = 0) -> Optional[List[int]]:
+        """Pop ``n`` blocks from the partition's free list, oldest-first.
+
+        All-or-nothing: returns None (and changes nothing) when fewer than
+        ``n`` blocks are free — the caller defers admission or stalls the
+        append until a completion frees blocks.
+        """
+        free = self._free[partition]
+        if n < 0:
+            raise ValueError(f"alloc({n}): negative block count")
+        if len(free) < n:
+            return None
+        ids = [free.popleft() for _ in range(n)]
+        self._live[partition].update(ids)
+        return ids
+
+    def free(self, ids, partition: int = 0) -> None:
+        """Return blocks to the tail of the partition's free list.
+
+        Raises ValueError on double-free or unknown ids — a table that frees
+        twice would let two requests share a physical block silently.
+        """
+        live = self._live[partition]
+        for i in ids:
+            if i not in live:
+                raise ValueError(f"double free of block {i} "
+                                 f"(partition {partition})")
+            live.discard(i)
+            self._free[partition].append(i)
+
+
+class BlockTable:
+    """Per-request view of the pool: ordered physical ids backing positions
+    [0, n_tokens). Grows via :meth:`ensure` (alloc-on-append) and returns its
+    blocks with :meth:`close` (free-on-completion).
+    """
+
+    def __init__(self, allocator: BlockAllocator, partition: int = 0):
+        self.allocator = allocator
+        self.partition = partition
+        self.blocks: List[int] = []
+        self._closed = False
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.blocks)
+
+    def capacity_tokens(self) -> int:
+        return len(self.blocks) * self.allocator.block_size
+
+    def ensure(self, n_tokens: int) -> bool:
+        """Grow the table to cover ``n_tokens`` positions; False = pool
+        exhausted (nothing allocated — retry after a completion frees blocks).
+        """
+        if self._closed:
+            raise RuntimeError("ensure() on a closed block table")
+        need = blocks_for(n_tokens, self.allocator.block_size) - len(self.blocks)
+        if need <= 0:
+            return True
+        got = self.allocator.alloc(need, self.partition)
+        if got is None:
+            return False
+        self.blocks.extend(got)
+        return True
+
+    def close(self) -> None:
+        """Free every block. Idempotent (a second close is a no-op, the
+        allocator itself rejects genuine double-frees)."""
+        if self._closed:
+            return
+        self.allocator.free(self.blocks, self.partition)
+        self.blocks = []
+        self._closed = True
+
+    def as_row(self, max_blocks: int) -> np.ndarray:
+        """(max_blocks,) int32 device view, unallocated tail = -1."""
+        if len(self.blocks) > max_blocks:
+            raise ValueError(f"table holds {len(self.blocks)} blocks > "
+                             f"max_blocks={max_blocks}")
+        row = np.full((max_blocks,), -1, np.int32)
+        row[:len(self.blocks)] = self.blocks
+        return row

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Optional, Sequence
+from typing import Sequence
 
 import numpy as np
 
@@ -31,6 +31,13 @@ class Request:
                              f"1-d token array, got shape {self.prompt.shape}")
         if self.max_new_tokens < 1:
             raise ValueError(f"request {self.rid}: max_new_tokens must be >=1")
+
+    def clone(self) -> "Request":
+        """Independent copy for replaying one trace through several engines
+        (engines never mutate requests, but the prompt array is shared state
+        a caller should not have to reason about)."""
+        return Request(self.rid, self.prompt.copy(), self.max_new_tokens,
+                       self.arrival)
 
     @property
     def prompt_len(self) -> int:

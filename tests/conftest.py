@@ -18,9 +18,5 @@ _SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
 
-
-def pytest_configure(config):
-    config.addinivalue_line(
-        "markers",
-        "slow: long-running multi-device integration test "
-        "(deselect with -m 'not slow')")
+# Markers (the `slow` tier split) and the tier-1 invocation live in
+# pyproject.toml [tool.pytest.ini_options].

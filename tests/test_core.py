@@ -8,9 +8,8 @@ from repro.core import simulator as sim
 from repro.core.partitioner import (balance_report, partition_costs,
                                     plan_stages)
 from repro.core.pipeline import EngineConfig
-from repro.core.scheduler import (TrialSpec, max_concurrent_trials,
-                                  per_chip_bytes, plan_gangs,
-                                  replan_after_failure)
+from repro.core.scheduler import (max_concurrent_trials, per_chip_bytes,
+                                  plan_gangs, replan_after_failure)
 from repro.core.trials import SuccessiveHalving, TrialResult, grid_search, \
     random_search
 

@@ -1,0 +1,180 @@
+"""Paged KV-cache bookkeeping: allocator free-list discipline (reuse order,
+atomic exhaustion, double-free rejection), block-table growth under chunked
+prefill, and pool-exhaustion backpressure deferring batcher admission.
+
+Host-side scheduling state only — no jax, runs in milliseconds. The
+device-side half (scatter/gather through the tables) is covered by the paged
+engine tests in test_serve_engine.py.
+"""
+import numpy as np
+import pytest
+
+from repro.serve import Batcher, BlockAllocator, BlockTable, Request, blocks_for
+
+
+def mk_req(rid, prompt_len, gen, arrival=0.0):
+    rng = np.random.default_rng(rid)
+    return Request(rid, rng.integers(0, 100, (prompt_len,)).astype(np.int32),
+                   gen, arrival=arrival)
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator
+# ---------------------------------------------------------------------------
+
+
+def test_alloc_free_reuse_order_is_fifo():
+    a = BlockAllocator(n_blocks=5, block_size=4)
+    first = a.alloc(2)
+    assert first == [0, 1]
+    assert a.alloc(1) == [2]
+    a.free(first)  # 0, 1 go to the tail of the free list
+    # oldest-first reuse: the untouched blocks come back before the recycled
+    assert a.alloc(3) == [3, 4, 0]
+    assert a.alloc(1) == [1]
+    assert a.free_blocks() == 0 and a.used_blocks() == 5
+
+
+def test_alloc_is_atomic_on_exhaustion():
+    a = BlockAllocator(n_blocks=4, block_size=4)
+    got = a.alloc(3)
+    assert a.alloc(2) is None  # only 1 free: all-or-nothing, nothing taken
+    assert a.free_blocks() == 1
+    assert a.alloc(1) == [3]
+    a.free(got + [3])
+    assert a.free_blocks() == 4 and a.all_free()
+
+
+def test_double_free_rejected():
+    a = BlockAllocator(n_blocks=4, block_size=4)
+    ids = a.alloc(2)
+    a.free(ids)
+    with pytest.raises(ValueError):
+        a.free([ids[0]])
+    with pytest.raises(ValueError):
+        a.free([99])  # never-allocated id
+    # the failed frees must not have corrupted the free list
+    assert a.free_blocks() == 4 and a.all_free()
+
+
+def test_partitioned_pool_ids_are_local():
+    a = BlockAllocator(n_blocks=8, block_size=4, n_partitions=2)
+    assert a.blocks_per_partition == 4
+    # both partitions hand out the same local id range
+    assert a.alloc(2, partition=0) == [0, 1]
+    assert a.alloc(2, partition=1) == [0, 1]
+    # partitions are independent: exhausting one leaves the other alone
+    assert a.alloc(3, partition=0) is None
+    assert a.alloc(2, partition=1) == [2, 3]
+    assert a.free_blocks(0) == 2 and a.free_blocks(1) == 0
+    with pytest.raises(ValueError):
+        BlockAllocator(n_blocks=7, block_size=4, n_partitions=2)
+
+
+# ---------------------------------------------------------------------------
+# BlockTable (alloc-on-append / free-on-completion)
+# ---------------------------------------------------------------------------
+
+
+def test_table_growth_during_chunked_prefill():
+    """ensure() grows exactly with the covered prefix as chunks append."""
+    a = BlockAllocator(n_blocks=8, block_size=4)
+    t = BlockTable(a)
+    covered = 0
+    for chunk_len in (5, 5, 5):  # 3 near-equal chunks of a 15-token prompt
+        covered += chunk_len
+        assert t.ensure(covered)
+        assert t.n_blocks == blocks_for(covered, 4)
+    assert t.n_blocks == 4 and t.capacity_tokens() == 16
+    # idempotent for already-covered prefixes
+    assert t.ensure(3) and t.n_blocks == 4
+    row = t.as_row(max_blocks=6)
+    assert row.tolist() == [0, 1, 2, 3, -1, -1]
+    t.close()
+    assert a.all_free()
+    t.close()  # idempotent
+    with pytest.raises(RuntimeError):
+        t.ensure(1)
+
+
+def test_table_growth_reports_exhaustion_without_partial_alloc():
+    a = BlockAllocator(n_blocks=2, block_size=4)
+    t = BlockTable(a)
+    assert t.ensure(8)
+    t2 = BlockTable(a)
+    assert not t2.ensure(4)  # pool dry: stall signal, nothing allocated
+    assert t2.n_blocks == 0
+    t.close()
+    assert t2.ensure(4)  # retry succeeds after blocks are freed
+    t2.close()
+
+
+# ---------------------------------------------------------------------------
+# Batcher admission backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_pool_exhaustion_defers_admission():
+    """Free cells alone are not capacity: admission defers (FCFS) until the
+    head request's exact block commitment fits the pool."""
+    alloc = BlockAllocator(n_blocks=6, block_size=4)
+    b = Batcher(n_microbatches=2, mb_global=2, prefill_chunks=2, max_seq=32,
+                allocator=alloc)
+    # total_len = 13 + 4 - 1 = 16 tokens -> 4 blocks committed per request
+    for i in range(3):
+        b.enqueue(mk_req(i, 13, 4))
+    admitted = b.admit(now=1.0)
+    # 4 + 4 > 6: only the head fits although 3 cells stay free
+    assert [s.request.rid for s in admitted] == [0]
+    assert b.occupied() == 1 and b.admit(now=2.0) == []
+    # completion frees the commitment; the queue head moves in FCFS order
+    admitted[0].release()
+    assert alloc.all_free()
+    assert [s.request.rid for s in b.admit(now=3.0)] == [1]
+
+
+def test_small_later_request_does_not_jump_the_queue():
+    alloc = BlockAllocator(n_blocks=6, block_size=4)
+    b = Batcher(n_microbatches=2, mb_global=1, prefill_chunks=1, max_seq=32,
+                allocator=alloc)
+    b.enqueue(mk_req(0, 13, 4))  # 4 blocks
+    b.enqueue(mk_req(1, 13, 4))  # 4 blocks -> deferred
+    b.enqueue(mk_req(2, 3, 2))   # 1 block: would fit, but FCFS holds it back
+    assert [s.request.rid for s in b.admit(now=1.0)] == [0]
+
+
+def test_unservable_request_rejected_at_enqueue():
+    alloc = BlockAllocator(n_blocks=4, block_size=4)
+    b = Batcher(n_microbatches=2, mb_global=2, prefill_chunks=1, max_seq=64,
+                allocator=alloc)
+    with pytest.raises(ValueError):  # needs 5 blocks, partition holds 4
+        b.enqueue(mk_req(0, 17, 2))
+    # overcommit < 1 lowers the admission ceiling below the physical pool:
+    # a request that fits the partition but not the limit must also be
+    # rejected up front (admit() would defer it forever)
+    tight = Batcher(n_microbatches=2, mb_global=2, prefill_chunks=1,
+                    max_seq=64, allocator=BlockAllocator(8, 4),
+                    overcommit=0.5)
+    with pytest.raises(ValueError):  # needs 4 blocks, ceiling = 8*0.5 = 4...
+        tight.enqueue(mk_req(1, 17, 4))  # 20 tokens -> 5 > 4
+    tight.enqueue(mk_req(2, 13, 4))  # 16 tokens -> 4 <= 4: admissible
+    assert [s.request.rid for s in tight.admit(now=1.0)] == [2]
+
+
+def test_admission_balances_partitions():
+    """Rows pick the partition with the fewest *committed* blocks (not the
+    allocator's free count — same-round admissions have not allocated yet),
+    so commitments spread instead of exhausting shard 0 while shard 1
+    idles."""
+    alloc = BlockAllocator(n_blocks=8, block_size=4, n_partitions=2)
+    # mb_global=4, two rows per partition: both partitions offer free cells
+    # with identical allocator free counts within one admit() round
+    b = Batcher(n_microbatches=1, mb_global=4, prefill_chunks=1, max_seq=32,
+                allocator=alloc, rows_per_partition=2)
+    for i in range(2):
+        b.enqueue(mk_req(i, 5, 4))  # 8 tokens -> 2 of 4 blocks per partition
+    admitted = b.admit(now=1.0)
+    assert len(admitted) == 2
+    parts = sorted(b.partition_of(s.b) for s in admitted)
+    assert parts == [0, 1]
+    assert b.committed_blocks(0) == 2 and b.committed_blocks(1) == 2

@@ -133,6 +133,40 @@ def test_plan_serve_capacity_fits_budget_and_meets_bubble():
     assert planned.n_microbatches >= eng.n_microbatches
 
 
+def test_plan_serve_capacity_paged_admits_more_at_equal_budget():
+    """The tentpole claim at the planner level: with the same HBM budget the
+    paged plan backs strictly more slot cells than dense worst-case strips
+    whenever expected length < max_seq, and its pool actually fits."""
+    cfg = ASSIGNED_ARCHS["chatglm3-6b"].reduced()
+    eng = base_eng()
+    max_seq = 256
+    est = sched.per_chip_bytes(cfg, dataclasses.replace(
+        eng, n_trials=1, n_microbatches=1), max_seq, train=False)
+    strip = eng.microbatch * max_seq * sched.kv_token_bytes_per_chip(cfg, eng)
+    budget = est.params_bytes + est.act_bytes + 3 * strip
+    dense = sched.plan_serve_capacity(cfg, eng, max_seq, hbm_bytes=budget,
+                                      budget_fraction=1.0, max_slots=64)
+    paged = sched.plan_serve_capacity(cfg, eng, max_seq, paged=True,
+                                      expected_seq=max_seq // 4,
+                                      hbm_bytes=budget, budget_fraction=1.0,
+                                      max_slots=64)
+    assert paged.paged and paged.n_blocks > 0
+    assert paged.n_microbatches > dense.n_microbatches
+    # the paged estimate (pool, not strips) stays inside the same budget
+    assert (sched.per_chip_bytes(cfg, paged, max_seq, train=False).total
+            <= budget)
+    # pool divides evenly over the data/pod partitions
+    dp = paged.data_size * paged.pod_size
+    assert paged.n_blocks % dp == 0
+    # even a starvation budget must leave each partition able to back one
+    # full max_seq request (the batcher hard-rejects in-spec traffic below)
+    tiny = sched.plan_serve_capacity(cfg, eng, max_seq, paged=True,
+                                     expected_seq=max_seq // 4, hbm_bytes=1,
+                                     budget_fraction=1.0)
+    per_row = -(-max_seq // tiny.block_size)
+    assert tiny.n_blocks // dp >= per_row
+
+
 def test_plan_serve_capacity_monotone_in_seq():
     """Longer caches can only reduce how many slots fit."""
     cfg = ASSIGNED_ARCHS["yi-34b"]  # full-size: memory bound actually binds

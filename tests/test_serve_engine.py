@@ -1,8 +1,11 @@
 """Continuous-batching serve engine: per-request greedy exactness vs the
 static-batch reference, slot recycling (occupancy beats lockstep batching on
-a staggered trace), and clean termination of a drained queue.
+a staggered trace), paged-KV parity with the dense path, and clean
+termination of a drained queue.
 
 (Multi-device setup comes from tests/conftest.py — pytest-only module.)"""
+import dataclasses  # noqa: E402
+
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
@@ -76,8 +79,7 @@ def test_continuous_matches_oracle_per_request(arch):
     cfg, opts, mesh, eng, params = build(arch)
     reqs = staggered_trace(cfg.vocab_size)
     engine = ServeEngine(cfg, eng, mesh, params, opts)
-    comps = engine.run([Request(r.rid, r.prompt.copy(), r.max_new_tokens,
-                                r.arrival) for r in reqs])
+    comps = engine.run([r.clone() for r in reqs])
     assert [c.rid for c in comps] == [r.rid for r in reqs]
     for r, c in zip(reqs, comps):
         assert len(c.tokens) == r.max_new_tokens
@@ -93,8 +95,7 @@ def test_continuous_matches_oracle_ssm_hybrid(arch):
     cfg, opts, mesh, eng, params = build(arch)
     reqs = staggered_trace(cfg.vocab_size, seed=2)
     engine = ServeEngine(cfg, eng, mesh, params, opts)
-    comps = engine.run([Request(r.rid, r.prompt.copy(), r.max_new_tokens,
-                                r.arrival) for r in reqs])
+    comps = engine.run([r.clone() for r in reqs])
     for r, c in zip(reqs, comps):
         assert c.tokens == oracle_tokens(cfg, opts, params, r), \
             f"request {r.rid} diverged from the single-device reference"
@@ -112,8 +113,7 @@ def test_continuous_beats_static_occupancy_and_matches_tokens():
             for i, g in enumerate(gens)]
 
     engine = ServeEngine(cfg, eng, mesh, params, opts)
-    cont = engine.run([Request(r.rid, r.prompt.copy(), r.max_new_tokens)
-                       for r in reqs])
+    cont = engine.run([r.clone() for r in reqs])
     stat, sstats = static_serve(cfg, eng, mesh, params, reqs, opts)
 
     for a, b in zip(cont, stat):
@@ -123,6 +123,68 @@ def test_continuous_beats_static_occupancy_and_matches_tokens():
         cstats.summary(), sstats.summary())
     assert cstats.decode_occupancy > sstats.decode_occupancy, (
         cstats.summary(), sstats.summary())
+
+
+def _clone(reqs):
+    return [r.clone() for r in reqs]
+
+
+def test_paged_matches_dense_and_oracle():
+    """Paged KV (shared block pool + block tables) must emit per-request
+    greedy tokens bit-identical to the dense strips and the single-device
+    oracle — and return every block to the free list on completion."""
+    cfg, opts, mesh, eng, params = build("chatglm3-6b")
+    paged = dataclasses.replace(eng, paged=True, block_size=4, n_blocks=24)
+    reqs = staggered_trace(cfg.vocab_size)
+    dense_engine = ServeEngine(cfg, eng, mesh, params, opts)
+    comp_dense = dense_engine.run(_clone(reqs))
+    paged_engine = ServeEngine(cfg, paged, mesh, params, opts)
+    comp_paged = paged_engine.run(_clone(reqs))
+    for r, a, b in zip(reqs, comp_dense, comp_paged):
+        assert a.tokens == b.tokens, f"request {r.rid}: paged != dense"
+        assert b.tokens == oracle_tokens(cfg, opts, params, r), \
+            f"request {r.rid}: paged diverged from the oracle"
+    assert paged_engine.allocator.all_free()  # free-on-completion, no leaks
+    assert max(paged_engine.stats.block_usage_samples) <= paged.n_blocks
+
+
+def test_paged_backpressure_still_exact():
+    """A pool too small for the full grid defers admission (backpressure)
+    but must not change any request's tokens or lose requests."""
+    cfg, opts, mesh, eng, params = build("chatglm3-6b")
+    # 6 blocks x 4 tokens = 24 cache tokens: roughly one long or two short
+    # requests live at a time (staggered totals are 9..17 tokens)
+    paged = dataclasses.replace(eng, paged=True, block_size=4, n_blocks=6)
+    reqs = staggered_trace(cfg.vocab_size)
+    dense_engine = ServeEngine(cfg, eng, mesh, params, opts)
+    comp_dense = dense_engine.run(_clone(reqs))
+    paged_engine = ServeEngine(cfg, paged, mesh, params, opts)
+    comp_paged = paged_engine.run(_clone(reqs), max_ticks=2000)
+    assert [c.rid for c in comp_paged] == [r.rid for r in reqs]
+    for a, b in zip(comp_dense, comp_paged):
+        assert a.tokens == b.tokens, f"request {a.rid}: paged != dense"
+    # the pool bound concurrency below the cell count at least once
+    assert max(paged_engine.stats.block_usage_samples) <= 6
+    assert paged_engine.stats.peak_live < paged_engine.batcher.n_cells
+    assert paged_engine.allocator.all_free()
+
+
+@pytest.mark.slow
+def test_paged_sharded_pool_matches_dense():
+    """data_size=2: each shard owns a pool partition and tables carry local
+    ids — exactness must survive the sharded scatter/gather."""
+    cfg, opts, mesh, eng, params = build("chatglm3-6b", n_stages=2,
+                                         data_size=2, microbatch=1)
+    paged = dataclasses.replace(eng, paged=True, block_size=4, n_blocks=24)
+    reqs = staggered_trace(cfg.vocab_size, seed=3)
+    dense_engine = ServeEngine(cfg, eng, mesh, params, opts)
+    comp_dense = dense_engine.run(_clone(reqs))
+    paged_engine = ServeEngine(cfg, paged, mesh, params, opts)
+    comp_paged = paged_engine.run(_clone(reqs))
+    for a, b in zip(comp_dense, comp_paged):
+        assert a.tokens == b.tokens, f"request {a.rid}: paged != dense"
+    assert paged_engine.allocator.n_partitions == 2
+    assert paged_engine.allocator.all_free()
 
 
 def test_drained_queue_terminates():

@@ -1,6 +1,5 @@
 """Substrate tests: optimizer, data pipeline, checkpointing, fault-tolerant
 loop, HLO analyzer."""
-import os
 
 import jax
 import jax.numpy as jnp
