@@ -5,21 +5,35 @@ Prints ``name,us_per_call,derived`` CSV:
   bert_memory/* paper §4.2 (per-device memory reduction, BERT-Large, 4-way)
   pipeline_throughput/* paper D2 (measured Hydra vs sequential MP wall time)
   exactness/*   paper D3 (pipelined == sequential training)
-  serve/*       continuous vs static + paged vs dense (capacity, occupancy)
+  serve/*       continuous vs static, paged vs dense, K-arch gang vs
+                sequential single-arch engines, admission policies
   roofline/*    §Roofline terms per (arch × shape) from the dry-run artifacts
+
+``--json PATH`` additionally writes the rows as a JSON list (the nightly CI
+job uploads these as workflow artifacts for trend tracking).
 
 Exit status: non-zero when any section raises or reports a failed row
 (``us_per_call`` < 0 — the per-bench error convention), so CI smoke jobs
 catch regressions instead of reading a green harness over red rows.
 """
 import json
+import os
 import sys
 
 
 def main() -> None:
     from benchmarks import (bench_exactness, bench_memory, bench_pipeline,
                             bench_serve, bench_utilization, roofline_table)
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    argv = list(sys.argv[1:])
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        try:
+            json_path = argv[i + 1]
+        except IndexError:
+            sys.exit("--json needs an output path")
+        del argv[i:i + 2]
+    only = argv[0] if argv else None
     all_benches = {
         "utilization": bench_utilization.run,
         "memory": bench_memory.run,
@@ -32,6 +46,7 @@ def main() -> None:
         sys.exit(f"unknown benchmark section {only!r} "
                  f"(choose from: {', '.join(all_benches)})")
     failed = []
+    all_rows = []
     print("name,us_per_call,derived")
     for name, fn in all_benches.items():
         if only and only != name:
@@ -44,8 +59,15 @@ def main() -> None:
         for r in rows:
             if r["us_per_call"] < 0:
                 failed.append(r["name"])
+            all_rows.append(r)
             print(f"{r['name']},{r['us_per_call']},"
                   f"\"{json.dumps(r['derived'])}\"")
+    if json_path:
+        d = os.path.dirname(json_path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(json_path, "w") as f:
+            json.dump(all_rows, f, indent=2)
     if failed:
         print(f"FAILED sections: {', '.join(failed)}", file=sys.stderr)
         sys.exit(1)

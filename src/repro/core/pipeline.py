@@ -45,7 +45,12 @@ from repro.models.layers import ModelOptions
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    """Static configuration of one Hydra gang (same-architecture trials)."""
+    """Static configuration of one Hydra gang (same-architecture trials).
+
+    In serving, the K trial rows double as the *co-serving* axis: each row
+    holds one model variant's weights and caches, and the serve engine routes
+    per-arch request streams into the matching rows (see repro/serve/).
+    """
 
     n_trials: int  # K — concurrent models (the paper's task-parallel level)
     n_microbatches: int  # M — slots per trial per step
@@ -66,8 +71,10 @@ class EngineConfig:
     paged: bool = False  # serve KV in a shared block pool instead of dense
     # per-slot max_seq strips (attention families only)
     block_size: int = 16  # tokens per block
-    n_blocks: int = 0  # global pool size; rows sharded over the data/pod
-    # axes each own an equal pool slice (n_blocks / dp_degree blocks)
+    n_blocks: int = 0  # pool size PER TRIAL (the paged cache leaf carries a
+    # leading K axis — each co-served variant owns its own pool); rows sharded
+    # over the data/pod axes each own an equal pool slice (n_blocks /
+    # dp_degree blocks per shard per trial)
     # --- §Perf knobs (baseline: all off/default) ---------------------------
     skip_bubbles: bool = False  # cond-skip fill/drain ticks (compute+gathers;
     # safe: validity is uniform over every axis the inner collectives span)
@@ -705,7 +712,10 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
     append: batch = {tokens (K,M,mb,qlen), positions (K,M,mb)}; inserts qlen
     tokens per row starting at the row's own cache depth ``positions`` —
     the continuous-batching admission path (chunked prefill of new requests
-    into recycled slots, per-row ragged offsets).
+    into recycled slots, per-row ragged offsets). The K axis is the
+    co-serving axis: every slot tick indexes params, cache slices, and block
+    tables by its own trial k, so one call advances cells of K different
+    model variants at once.
     All modes accept an optional ``batch["active"]`` (K,M,mb) bool row mask:
     inactive rows compute (SPMD shapes are static) but their cache rows are
     left untouched, so idle slots can ride along in a live batch.

@@ -143,52 +143,86 @@ def plan_serve_capacity(cfg: ArchConfig, base_eng: EngineConfig,
                         block_size: int = 16,
                         hbm_bytes: Optional[int] = None,
                         budget_fraction: float = HBM_BUDGET_FRACTION,
+                        mix: Optional[Sequence[tuple]] = None,
                         ) -> EngineConfig:
-    """Choose the serving slot count M (``n_microbatches``) for one model.
+    """Choose the serving slot grid for one model — or a co-serving gang.
+
+    ``mix`` sizes the grid for a *traffic mix* across a K-variant gang: one
+    ``(arrival_weight, expected_seq)`` pair per co-served arch. The returned
+    config then carries ``n_trials = len(mix)`` (trial row k serves arch k)
+    and every per-trial cost — params, dense strips, paged pools — is
+    multiplied by K. ``mix=None`` is the single-arch plan (K=1,
+    ``expected_seq`` as the lone expectation).
 
     Dense path: serving is forward-only, so ``per_chip_bytes(train=False)``
     applies — the KV/SSM cache at ``max_seq`` is the marginal HBM cost per
     slot (admission is by *worst case*: every cell reserves a full strip).
-    Start from the pipeline-bubble target ((S-1)/(M+S-1) <= target with K=1 —
+    Start from the pipeline-bubble target ((S-1)/(K·M+S-1) <= target —
     more slots = more concurrent requests = smaller bubble, Hydra's
     slot-filling insight applied to serving), then shrink M until the cache
     fits the budget.
 
-    Paged path (``paged=True``): the leftover budget becomes one shared
-    block pool per chip, and M is sized so the pool backs M × microbatch
-    rows at their *expected* length (``expected_seq``, default max_seq/2) —
-    admission by expectation instead of worst case, which is where the
-    capacity win over the dense plan comes from. The returned config carries
-    ``n_blocks``/``block_size``; the runtime batcher keeps the plan
-    preemption-free by committing each admitted request's exact block need
-    against the pool and deferring admission when it would not fit
-    (overcommit headroom is a batcher knob, see serve/paging.py).
+    Paged path (``paged=True``): the leftover budget becomes one block pool
+    per (chip, trial), and M is sized so the pools back K × M × microbatch
+    rows at their arrival-weighted *expected* lengths — admission by
+    expectation instead of worst case, which is where the capacity win over
+    the dense plan comes from. Each trial's pool is an equal slice (the
+    cache leaf is uniform over K); arches whose weighted demand
+    ``K · w_k · expected_k`` exceeds the slice lean on the batcher's
+    per-arch backpressure at runtime. The returned config carries
+    ``n_blocks`` (per trial) / ``block_size``; the runtime batcher keeps the
+    plan preemption-free by committing each admitted request's exact block
+    need against its (trial, shard) partition and deferring that arch's
+    admission when it would not fit (overcommit headroom is a batcher knob,
+    see serve/paging.py).
     """
     budget = (HBM_BYTES_PER_CHIP if hbm_bytes is None
               else hbm_bytes) * budget_fraction
+    if mix is not None:
+        if not mix or any(w < 0 for w, _ in mix) \
+                or sum(w for w, _ in mix) <= 0:
+            raise ValueError(f"mix must be non-empty (weight, expected_seq) "
+                             f"pairs with positive total weight, got {mix}")
+        k_trials = len(mix)
+        w_total = sum(w for w, _ in mix)
+        # per-row expected demand of trial k, scaled by its arrival share
+        # (uniform weights -> demand_k = expected_k)
+        demands = [min(max(int(e), 1), max_seq) * (w * k_trials / w_total)
+                   for w, e in mix]
+    else:
+        k_trials = 1
+        demands = [min(max(expected_seq or max_seq // 2, 1), max_seq)]
     s = base_eng.n_stages
     if s > 1:
         m_bubble = math.ceil((s - 1) * (1.0 - target_bubble)
-                             / max(target_bubble, 1e-9))
+                             / max(target_bubble * k_trials, 1e-9))
     else:
         m_bubble = 1
     if paged:
-        eng = dataclasses.replace(base_eng, n_trials=1, max_seq=max_seq,
-                                  paged=True, block_size=block_size,
-                                  n_blocks=0, n_microbatches=1)
-        est = per_chip_bytes(cfg, eng, max_seq, train=False)
-        fixed = est.params_bytes + est.opt_bytes + est.act_bytes
+        eng = dataclasses.replace(base_eng, n_trials=k_trials,
+                                  max_seq=max_seq, paged=True,
+                                  block_size=block_size, n_blocks=0,
+                                  n_microbatches=1)
+        est = per_chip_bytes(cfg, dataclasses.replace(eng, n_trials=1),
+                             max_seq, train=False)
+        # act_bytes is the per-tick transient working set and does NOT scale
+        # with K: the serve scan advances one slot per stage per tick, so K
+        # only lengthens the scan (K·M+S−1 ticks), never widens a tick
+        fixed = (est.params_bytes + est.opt_bytes) * k_trials + est.act_bytes
         token_b = kv_token_bytes_per_chip(cfg, eng)
         dp = 1 if eng.batch_replicated else eng.data_size * eng.pod_size
         # (ceil-div mirrors serve/paging.py::blocks_for; core/ stays below
         # serve/ in the layering so it is not imported here)
         per_row = -(-max_seq // block_size)
-        # floor: one partition must back a full max_seq request, or the
-        # batcher would hard-reject in-spec traffic at enqueue time
-        local_blocks = max(int(budget - fixed) // (token_b * block_size),
-                           per_row)
-        exp = min(max(expected_seq or max_seq // 2, 1), max_seq)
-        m_cap = (local_blocks * block_size) // (exp * eng.microbatch)
+        # floor: every (trial, shard) partition must back a full max_seq
+        # request, or the batcher would hard-reject in-spec traffic at
+        # enqueue time. local_blocks is per chip PER TRIAL.
+        local_blocks = max(
+            int(budget - fixed) // (token_b * block_size * k_trials),
+            per_row)
+        mean_demand = sum(demands) / k_trials
+        m_cap = int(local_blocks * block_size
+                    // (mean_demand * eng.microbatch))
         m = min(max_slots, max(1, m_cap))
         # blocks beyond the capped grid's worst case are dead weight (every
         # cell fully backed at max_seq) — return them to the budget
@@ -196,10 +230,16 @@ def plan_serve_capacity(cfg: ArchConfig, base_eng: EngineConfig,
         return dataclasses.replace(eng, n_microbatches=m,
                                    n_blocks=local_blocks * dp)
     m = min(max(m_bubble, base_eng.n_microbatches, 1), max_slots)
-    eng = dataclasses.replace(base_eng, n_trials=1, n_microbatches=m,
+    eng = dataclasses.replace(base_eng, n_trials=k_trials, n_microbatches=m,
                               max_seq=max_seq)
-    while (per_chip_bytes(cfg, eng, max_seq, train=False).total > budget
-           and eng.n_microbatches > 1):
+
+    def total(e):
+        one = per_chip_bytes(cfg, dataclasses.replace(e, n_trials=1),
+                             max_seq, train=False)
+        return ((one.params_bytes + one.opt_bytes + one.cache_bytes)
+                * k_trials + one.act_bytes)
+
+    while total(eng) > budget and eng.n_microbatches > 1:
         eng = dataclasses.replace(eng, n_microbatches=eng.n_microbatches - 1)
     return eng
 

@@ -3,14 +3,29 @@
 Default mode streams a dynamic request trace (Poisson arrivals or a JSONL
 replay) through :class:`repro.serve.ServeEngine` — slots are recycled the
 round a request finishes and queued requests are admitted via chunked
-prefill. ``--static`` runs the old lockstep baseline on the same trace for
+prefill. ``--arches K`` co-serves K model variants from one gang: the slot
+grid grows a trial axis, each request's ``arch`` id routes it to its own
+variant's rows, and one SPMD program advances all K streams per tick.
+``--static`` runs the old lockstep baseline on the same trace for
 comparison.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python -m repro.launch.serve --arch chatglm3-6b --smoke \
         --n-data 2 --n-model 4 --slots 3 --n-requests 12 --rate 2.0
 
-    # replay a recorded request stream
+    # co-serve two variants from one gang, traffic skewed 3:1 toward arch 0
+    ... python -m repro.launch.serve --arch chatglm3-6b --smoke \
+        --arches 2 --arch-weights 3,1 --n-requests 16 --rate 2.0
+
+    # paged multi-arch gang with shortest-prompt-first admission
+    ... python -m repro.launch.serve --arch chatglm3-6b --smoke \
+        --arches 2 --paged --policy sjf --n-requests 16
+
+    # sliding-window serving (attention archs; window < prompt+gen)
+    ... python -m repro.launch.serve --arch chatglm3-6b --smoke \
+        --window 8 --n-requests 12
+
+    # replay a recorded request stream (JSONL rows may carry arch/deadline)
     ... python -m repro.launch.serve --arch chatglm3-6b --smoke \
         --trace /tmp/stream.jsonl
 """
@@ -29,8 +44,8 @@ from repro.core import scheduler as sched
 from repro.core.partitioner import plan_stages
 from repro.launch.mesh import make_test_mesh
 from repro.models.layers import ModelOptions
-from repro.serve import (Request, ServeEngine, blocks_for, load_trace,
-                         poisson_trace, static_serve)
+from repro.serve import (POLICIES, Request, ServeEngine, blocks_for,
+                         load_trace, poisson_trace, static_serve)
 
 
 def build_args():
@@ -39,9 +54,15 @@ def build_args():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--n-data", type=int, default=1)
     ap.add_argument("--n-model", type=int, default=1)
+    ap.add_argument("--arches", type=int, default=1,
+                    help="model variants K co-served by one gang (trial "
+                    "rows); requests are routed by their arch id")
+    ap.add_argument("--arch-weights", default="",
+                    help="comma arrival weights per arch for the synthetic "
+                    "trace and capacity planning (default uniform)")
     ap.add_argument("--slots", type=int, default=0,
-                    help="microbatch slots M (0 = capacity-planned, capped "
-                    "by --max-slots)")
+                    help="microbatch slots M per trial (0 = capacity-planned,"
+                    " capped by --max-slots)")
     ap.add_argument("--max-slots", type=int, default=8)
     ap.add_argument("--microbatch", type=int, default=1,
                     help="requests per (slot × data replica)")
@@ -56,27 +77,46 @@ def build_args():
                     help="JSONL request-stream to replay instead of the "
                     "synthetic Poisson trace")
     ap.add_argument("--prefill-chunks", type=int, default=2)
+    ap.add_argument("--policy", choices=POLICIES, default="fcfs",
+                    help="per-arch admission order: fcfs | sjf (shortest "
+                    "prompt first) | deadline (earliest Request.deadline)")
+    ap.add_argument("--deadline-slack", type=float, default=0.0,
+                    help=">0: stamp synthetic requests with arrival + slack "
+                    "* total_len deadlines (for --policy deadline)")
+    ap.add_argument("--window", type=int, default=0,
+                    help="sliding attention window in tokens (0 = full "
+                    "attention; attention-family archs only)")
     ap.add_argument("--static", action="store_true",
                     help="run the lockstep static-batch baseline instead")
     cache = ap.add_mutually_exclusive_group()
     cache.add_argument("--paged", action="store_true",
-                       help="paged KV-cache: shared block pool + per-request "
-                       "block tables (admit by expected length)")
+                       help="paged KV-cache: per-trial block pools + "
+                       "per-request block tables (admit by expected length)")
     cache.add_argument("--dense", action="store_true",
                        help="dense per-slot cache strips (the default)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="tokens per KV block (--paged)")
     ap.add_argument("--n-blocks", type=int, default=0,
-                    help="global block-pool size (--paged with explicit "
+                    help="per-trial block-pool size (--paged with explicit "
                     "--slots; 0 = back every cell at max_seq)")
     ap.add_argument("--expected-seq", type=int, default=0,
                     help="expected request length for paged capacity "
                     "planning (0 = max_seq/2)")
     ap.add_argument("--overcommit", type=float, default=1.0,
                     help="paged admission headroom: commit up to this "
-                    "fraction of the pool (1.0 = preemption-free)")
+                    "fraction of each pool partition (1.0 = preemption-free)")
     ap.add_argument("--seed", type=int, default=0)
     return ap
+
+
+def parse_weights(spec: str, k: int):
+    if not spec:
+        return None
+    w = [float(x) for x in spec.split(",")]
+    if len(w) != k:
+        raise SystemExit(f"--arch-weights needs {k} comma-separated values, "
+                         f"got {len(w)}")
+    return w
 
 
 def main():
@@ -84,6 +124,10 @@ def main():
     if args.paged and args.static:
         raise SystemExit("--static is the dense lockstep baseline; "
                          "drop --paged")
+    if args.static and args.arches > 1:
+        raise SystemExit("--static is single-arch lockstep batching; "
+                         "multi-arch routing needs the continuous engine")
+    weights = parse_weights(args.arch_weights, args.arches)
     mesh = make_test_mesh(args.n_data, args.n_model)
     cfg = get_config(args.arch)
     if args.smoke:
@@ -91,21 +135,26 @@ def main():
     max_seq = args.prompt_len + args.gen_len
     opts = ModelOptions()
     base = pl.EngineConfig(
-        n_trials=1, n_microbatches=max(args.slots, 1),
+        n_trials=args.arches, n_microbatches=max(args.slots, 1),
         microbatch=args.microbatch, n_stages=args.n_model,
         data_size=args.n_data, max_seq=max_seq, cache_dtype=jnp.float32,
         prefill_chunks=args.prefill_chunks, paged=args.paged,
-        block_size=args.block_size)
+        block_size=args.block_size, window=args.window)
     if args.slots <= 0:
+        exp = args.expected_seq or None
+        mix = None
+        if args.arches > 1:
+            w = weights or [1.0] * args.arches
+            mix = [(wi, exp or max_seq // 2) for wi in w]
         planned = sched.plan_serve_capacity(
-            cfg, base, max_seq, paged=args.paged,
-            expected_seq=args.expected_seq or None,
-            block_size=args.block_size, max_slots=args.max_slots)
+            cfg, base, max_seq, paged=args.paged, expected_seq=exp,
+            block_size=args.block_size, max_slots=args.max_slots, mix=mix)
         slots = min(planned.n_microbatches, args.max_slots)
-        print(f"capacity plan: {planned.n_microbatches} slots fit the HBM "
-              f"budget; using {slots}"
+        print(f"capacity plan: {planned.n_trials} trial row(s) x "
+              f"{planned.n_microbatches} slots fit the HBM budget; "
+              f"using {slots} slots/trial"
               + (f" (pool: {planned.n_blocks} x {planned.block_size}-token "
-                 f"blocks)" if args.paged else ""))
+                 f"blocks per trial)" if args.paged else ""))
         base = dataclasses.replace(base, n_microbatches=slots,
                                    n_blocks=planned.n_blocks)
     elif args.paged:
@@ -125,6 +174,10 @@ def main():
         if too_long:
             raise SystemExit(f"trace requests {too_long} exceed max_seq="
                              f"{max_seq}; raise --prompt-len/--gen-len")
+        bad_arch = [r.rid for r in requests if r.arch >= args.arches]
+        if bad_arch:
+            raise SystemExit(f"trace requests {bad_arch} target arch ids >= "
+                             f"--arches={args.arches}; raise --arches")
         if args.static:
             # fail before params/compile: lockstep groups need one length
             n_cells = eng.n_microbatches * eng.microbatch * eng.data_size
@@ -149,7 +202,8 @@ def main():
             args.n_requests, args.rate, cfg.vocab_size,
             prompt_lens=(max(args.prompt_len // 2, 1), args.prompt_len),
             gen_lens=(max(args.gen_len // 2, 1), args.gen_len),
-            seed=args.seed)
+            seed=args.seed, n_arches=args.arches, arch_weights=weights,
+            deadline_slack=args.deadline_slack)
 
     plan = plan_stages(cfg, eng.n_stages)
     params = pl.init_trial_params(cfg, eng, plan,
@@ -162,13 +216,17 @@ def main():
         mode = "static"
     else:
         engine = ServeEngine(cfg, eng, mesh, params, opts,
-                             overcommit=args.overcommit)
+                             overcommit=args.overcommit, policy=args.policy)
         completions = engine.run(requests)
         stats = engine.stats
         mode = "continuous/paged" if args.paged else "continuous"
+        if args.arches > 1:
+            mode += f" x{args.arches}-arch gang"
 
     for c in completions[:8]:
-        print(f"  req[{c.rid}] plen={c.prompt_len} queue={c.queue_ticks:.1f} "
+        arch = f" arch={c.arch}" if args.arches > 1 else ""
+        print(f"  req[{c.rid}]{arch} plen={c.prompt_len} "
+              f"queue={c.queue_ticks:.1f} ttft={c.ttft_ticks:.1f} "
               f"latency={c.latency_ticks:.1f} generated {c.tokens}")
     if len(completions) > 8:
         print(f"  ... {len(completions) - 8} more")
@@ -178,9 +236,16 @@ def main():
           f"({s['tokens_per_s']} tok/s on this host)")
     print(f"slot occupancy {s['slot_occupancy']}, "
           f"decode occupancy {s['decode_occupancy']}")
+    if "ttft_p50" in s:
+        print(f"TTFT p50/p95 {s['ttft_p50']}/{s['ttft_p95']} ticks, "
+              f"TPOT p50/p95 {s.get('tpot_p50', 0)}/{s.get('tpot_p95', 0)} "
+              f"ticks/token [{args.policy}]")
+    if "tokens_per_arch" in s:
+        per = ", ".join(f"arch{k}={v}" for k, v in s["tokens_per_arch"].items())
+        print(f"tokens per arch: {per}")
     if args.paged:
-        print(f"block pool: {eng.n_blocks} x {eng.block_size}-token blocks, "
-              f"peak in use {s.get('peak_blocks_in_use', 0)}, "
+        print(f"block pool: {eng.n_blocks} x {eng.block_size}-token blocks "
+              f"per trial, peak in use {s.get('peak_blocks_in_use', 0)}, "
               f"pool stalls {s.get('pool_stalls', 0)}")
 
 

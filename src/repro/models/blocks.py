@@ -137,13 +137,21 @@ def attn_apply(cfg: ArchConfig, opts: ModelOptions, p, x, *, pos,
             kv_len=kv_len, opts=opts)
     elif mode == "decode" and block_tables is not None:
         # paged decode: one-token append through the table, then the same
-        # masked-full-cache attention the dense decode runs
+        # masked-full-cache attention the dense decode runs; window > 0
+        # additionally masks positions <= pos - window (the gathered view is
+        # in absolute logical layout, so the positional mask is exact)
         new_cache, kf, vf = paged_kv_update(cache, k, v, block_tables,
                                             kv_offset, write_mask)
         kv_len = jnp.minimum(kv_offset + 1, kf.shape[1])
-        out = L.attention(
-            q, kf.astype(q.dtype), vf.astype(q.dtype),
-            causal=False, window=0, kv_offset=0, kv_len=kv_len, opts=opts)
+        if window > 0:
+            out = L.attention(
+                q, kf.astype(q.dtype), vf.astype(q.dtype),
+                causal=True, window=window, kv_offset=kv_offset,
+                kv_len=kv_len, opts=opts)
+        else:
+            out = L.attention(
+                q, kf.astype(q.dtype), vf.astype(q.dtype),
+                causal=False, window=0, kv_offset=0, kv_len=kv_len, opts=opts)
     elif mode == "decode":
         # ring-buffer insert: slot = kv_offset mod cache_len (identity for
         # unwindowed caches, rolling slot for sliding-window caches)
@@ -157,9 +165,20 @@ def attn_apply(cfg: ArchConfig, opts: ModelOptions, p, x, *, pos,
             "v": jax.vmap(upd)(cache["v"], v, slot),
         }
         kv_len = jnp.minimum(kv_offset + 1, s_cache)
-        out = L.attention(
-            q, new_cache["k"].astype(q.dtype), new_cache["v"].astype(q.dtype),
-            causal=False, window=0, kv_offset=0, kv_len=kv_len, opts=opts)
+        if window > 0 and s_cache > window:
+            # absolute-layout cache wider than the window (continuous-batching
+            # serving keeps max_seq strips): mask positions <= pos - window.
+            # When s_cache <= window the ring itself enforces the window (the
+            # static long-context path) and every live row is attendable.
+            out = L.attention(
+                q, new_cache["k"].astype(q.dtype),
+                new_cache["v"].astype(q.dtype), causal=True, window=window,
+                kv_offset=kv_offset, kv_len=kv_len, opts=opts)
+        else:
+            out = L.attention(
+                q, new_cache["k"].astype(q.dtype),
+                new_cache["v"].astype(q.dtype),
+                causal=False, window=0, kv_offset=0, kv_len=kv_len, opts=opts)
     else:
         raise ValueError(mode)
     out = out.reshape(b, s, h * hd)

@@ -1,4 +1,5 @@
-"""Continuous-batching serve subsystem (request queue → pipeline slots)."""
+"""Continuous-batching serve subsystem: per-arch request queues routed onto
+the (trial k, microbatch m, batch-row b) slot grid of one co-serving gang."""
 from repro.serve.request import (  # noqa: F401
     Completion,
     Request,
@@ -6,8 +7,8 @@ from repro.serve.request import (  # noqa: F401
     poisson_trace,
     save_trace,
 )
-from repro.serve.batcher import Batcher, Slot  # noqa: F401
-from repro.serve.engine import ServeEngine, static_serve  # noqa: F401
+from repro.serve.batcher import POLICIES, Batcher, Slot  # noqa: F401
+from repro.serve.engine import ServeEngine, ServeStats, static_serve  # noqa: F401
 from repro.serve.paging import (  # noqa: F401
     BlockAllocator,
     BlockTable,

@@ -1,18 +1,30 @@
-"""Admission scheduling: map a dynamic request queue onto pipeline slots.
+"""Admission scheduling: map per-arch request queues onto the (k, m, b) grid.
 
-The pipelined serve step has a fixed slot grid — ``n_microbatches``
-microbatch slots × ``mb_global`` batch rows per slot — and every (m, b) cell
-owns one KV/SSM-cache row. The :class:`Batcher` tracks which cell holds which
-request, admits queued requests FCFS into freed cells, and plans chunked
-prefill *waves*: each admitted prompt is split into ``prefill_chunks``
-near-equal chunks, and each wave groups cells by next-chunk length so every
-pipeline call keeps a static token shape (cells in the same call may sit at
-different cache depths — the append step takes per-row kv offsets).
+The pipelined serve step has a fixed slot grid — ``n_trials`` trial rows ×
+``n_microbatches`` microbatch slots × ``mb_global`` batch rows — and every
+(k, m, b) cell owns one KV/SSM-cache row of trial k. Trial row k holds the
+weights of model variant k (the co-serving analogue of the paper's gang: K
+model variants sharded onto one device gang), so a request addressed to
+``arch`` a may only ever occupy cells with k == a.
+
+The :class:`Batcher` keeps one queue per arch, admits each queue into its own
+trial rows under the configured ``policy`` (FCFS / shortest-prompt-first /
+deadline-aware — ordering is always *within* an arch; arches never compete
+for each other's cells), and plans chunked prefill *waves*: each admitted
+prompt is split into ``prefill_chunks`` near-equal chunks, and each wave
+groups cells by next-chunk length so every pipeline call keeps a static token
+shape (cells in the same call may sit at different cache depths — the append
+step takes per-row kv offsets).
+
+Paged backpressure is per (trial, data-shard) pool partition: an arch whose
+head request cannot commit its blocks defers *only that arch's* admission —
+other arches keep admitting into their own partitions, so one overloaded
+variant can never starve the rest of the gang (the cross-arch guard the
+engine's stall detector backstops).
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from typing import Optional
 
 import numpy as np
@@ -20,11 +32,14 @@ import numpy as np
 from repro.serve.paging import BlockAllocator, BlockTable, blocks_for
 from repro.serve.request import Request
 
+POLICIES = ("fcfs", "sjf", "deadline")
+
 
 @dataclasses.dataclass
 class Slot:
-    """One (microbatch m, batch-row b) cell of the serve grid."""
+    """One (trial k, microbatch m, batch-row b) cell of the serve grid."""
 
+    k: int
     m: int
     b: int
     request: Optional[Request] = None
@@ -32,6 +47,7 @@ class Slot:
     chunks: list = dataclasses.field(default_factory=list)  # pending prompt
     generated: list = dataclasses.field(default_factory=list)
     admitted_tick: int = -1
+    first_token_tick: int = -1  # tick the head emitted this request's first token
     table: Optional[BlockTable] = None  # paged: this request's block table
     block_commit: int = 0  # paged: exact blocks this request will peak at
 
@@ -58,6 +74,7 @@ class Slot:
         self.chunks = []
         self.generated = []
         self.admitted_tick = -1
+        self.first_token_tick = -1
         if self.table is not None:  # free-on-completion
             self.table.close()
             self.table = None
@@ -65,23 +82,39 @@ class Slot:
 
 
 class Batcher:
-    """FCFS admission of queued requests into free slot cells.
+    """Per-arch admission of queued requests into the arch's trial rows.
 
-    With a :class:`BlockAllocator` (paged serving), admission additionally
-    commits each request's exact block footprint (generation always runs to
-    its budget, so ``blocks_for(total_len)`` is known at admission) against
-    its pool partition and defers — backpressure — when the committed total
-    would exceed ``blocks_per_partition × overcommit``. At the default
-    overcommit of 1.0 the schedule is preemption-free: every later
-    alloc-on-append is covered by its commitment and can never stall.
-    ``rows_per_partition`` maps batch row b to pool partition
-    b // rows_per_partition (the data/pod shard holding that row).
+    ``n_trials`` is the gang width K: request ``arch`` a is only ever placed
+    in cells (a, m, b). ``policy`` orders admission *within* an arch's queue
+    among the requests that have arrived:
+
+    * ``"fcfs"``   — arrival order (the default);
+    * ``"sjf"``    — shortest prompt first (minimizes mean TTFT under load);
+    * ``"deadline"`` — earliest ``Request.deadline`` first (None sorts last).
+
+    With a :class:`BlockAllocator` (paged serving), the pool is split into one
+    partition per (trial, data-shard) pair — partition k * n_shards + shard —
+    so each trial row's cache writes land in its own pool slice and admission
+    additionally commits each request's exact block footprint (generation
+    always runs to its budget, so ``blocks_for(total_len)`` is known at
+    admission) against its partition, deferring — per-arch backpressure —
+    when the committed total would exceed ``blocks_per_partition ×
+    overcommit``. At the default overcommit of 1.0 the schedule is
+    preemption-free: every later alloc-on-append is covered by its
+    commitment and can never stall. ``rows_per_partition`` maps batch row b
+    to data shard b // rows_per_partition.
     """
 
     def __init__(self, n_microbatches: int, mb_global: int,
                  prefill_chunks: int, max_seq: int,
+                 n_trials: int = 1,
                  allocator: Optional[BlockAllocator] = None,
-                 rows_per_partition: int = 0, overcommit: float = 1.0):
+                 rows_per_partition: int = 0, overcommit: float = 1.0,
+                 policy: str = "fcfs"):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown admission policy {policy!r} "
+                             f"(choose from {POLICIES})")
+        self.n_trials = n_trials
         self.n_microbatches = n_microbatches
         self.mb_global = mb_global
         self.prefill_chunks = max(1, prefill_chunks)
@@ -89,24 +122,39 @@ class Batcher:
         self.allocator = allocator
         self.rows_per_partition = rows_per_partition
         self.overcommit = overcommit
-        self.slots = [Slot(m, b) for m in range(n_microbatches)
+        self.policy = policy
+        self.slots = [Slot(k, m, b) for k in range(n_trials)
+                      for m in range(n_microbatches)
                       for b in range(mb_global)]
-        self.queue: deque = deque()
+        self.queues: list[list] = [[] for _ in range(n_trials)]
 
-    def partition_of(self, b: int) -> int:
-        if self.allocator is None or self.rows_per_partition <= 0:
+    @property
+    def n_shards(self) -> int:
+        """Data-shard partitions per trial (1 when unsharded/unpaged)."""
+        if self.allocator is None:
+            return 1
+        return self.allocator.n_partitions // self.n_trials
+
+    def partition_of(self, k: int, b: int) -> int:
+        if self.allocator is None:
             return 0
-        return min(b // self.rows_per_partition,
-                   self.allocator.n_partitions - 1)
+        shard = 0
+        if self.rows_per_partition > 0:
+            shard = min(b // self.rows_per_partition, self.n_shards - 1)
+        return k * self.n_shards + shard
 
     def committed_blocks(self, partition: int) -> int:
         """Blocks promised to live requests in one pool partition."""
         return sum(s.block_commit for s in self.slots
-                   if not s.free and self.partition_of(s.b) == partition)
+                   if not s.free and self.partition_of(s.k, s.b) == partition)
 
     # -- queue ---------------------------------------------------------------
 
     def enqueue(self, req: Request) -> None:
+        if req.arch >= self.n_trials:
+            raise ValueError(
+                f"request {req.rid}: arch={req.arch} but this gang co-serves "
+                f"{self.n_trials} variant(s) (trial rows 0..{self.n_trials - 1})")
         if req.total_len > self.max_seq:
             raise ValueError(
                 f"request {req.rid}: prompt_len + max_new_tokens - 1 = "
@@ -126,7 +174,7 @@ class Batcher:
                     f"(blocks_per_partition="
                     f"{self.allocator.blocks_per_partition}, overcommit="
                     f"{self.overcommit}) — it could never be admitted")
-        self.queue.append(req)
+        self.queues[req.arch].append(req)
 
     # -- admission -----------------------------------------------------------
 
@@ -136,56 +184,80 @@ class Batcher:
         nc = min(self.prefill_chunks, prompt.shape[0])
         return [c for c in np.array_split(prompt, nc) if c.size]
 
-    def admit(self, now: float) -> list:
-        """Move queued requests (arrival <= now) into free cells, FCFS.
+    def _head(self, k: int, now: float) -> Optional[Request]:
+        """The next admissible request of arch k under the policy (among the
+        requests that have arrived), without removing it from the queue."""
+        arrived = [r for r in self.queues[k] if r.arrival <= now]
+        if not arrived:
+            return None
+        if self.policy == "sjf":
+            return min(arrived, key=lambda r: (r.prompt_len, r.arrival, r.rid))
+        if self.policy == "deadline":
+            inf = float("inf")
+            return min(arrived, key=lambda r: (
+                r.deadline if r.deadline is not None else inf,
+                r.arrival, r.rid))
+        return arrived[0]  # fcfs: queues preserve arrival order
 
-        Paged: the head request is placed in the free cell whose pool
-        partition has the most free blocks, and admission stops (defers —
-        the queue keeps FCFS order) as soon as the head's exact block
-        commitment fits no partition. Returns the newly admitted slots.
+    def admit(self, now: float) -> list:
+        """Move queued requests (arrival <= now) into free cells of their own
+        arch's trial rows, ordered per the admission policy within each arch.
+
+        Paged: each arch's head request is placed in the free cell whose pool
+        partition has the fewest committed blocks, and *that arch's*
+        admission stops (defers — the queue keeps its order) as soon as the
+        head's exact block commitment fits none of the arch's partitions.
+        Other arches continue admitting into their own partitions, so pool
+        exhaustion in one variant never starves the rest of the gang.
+        Returns the newly admitted slots.
         """
         admitted = []
-        free = [s for s in self.slots if s.free]
-        while free and self.queue and self.queue[0].arrival <= now:
-            req = self.queue[0]
-            if self.allocator is None:
-                slot = free.pop(0)
-            else:
-                commit = blocks_for(req.total_len, self.allocator.block_size)
-                limit = int(self.allocator.blocks_per_partition
-                            * self.overcommit)
-                # balance by *committed* blocks, not the allocator's free
-                # count — commitments from requests admitted earlier this
-                # round have not allocated yet but already claim their pool
-                free.sort(key=lambda s: (
-                    self.committed_blocks(self.partition_of(s.b)),
-                    s.m, s.b))
-                slot = None
-                for cand in free:
-                    p = self.partition_of(cand.b)
-                    if self.committed_blocks(p) + commit <= limit:
-                        slot = cand
-                        break
-                if slot is None:  # pool backpressure: defer admission
+        for k in range(self.n_trials):
+            free = [s for s in self.slots if s.free and s.k == k]
+            while free:
+                req = self._head(k, now)
+                if req is None:
                     break
-                free.remove(slot)
-                slot.table = BlockTable(self.allocator,
-                                        self.partition_of(slot.b))
-                slot.block_commit = commit
-            self.queue.popleft()
-            slot.request = req
-            slot.pos = 0
-            slot.chunks = self.split_chunks(req.prompt)
-            slot.generated = []
-            slot.admitted_tick = int(now)
-            admitted.append(slot)
+                if self.allocator is None:
+                    slot = free.pop(0)
+                else:
+                    commit = blocks_for(req.total_len,
+                                        self.allocator.block_size)
+                    limit = int(self.allocator.blocks_per_partition
+                                * self.overcommit)
+                    # balance by *committed* blocks, not the allocator's free
+                    # count — commitments from requests admitted earlier this
+                    # round have not allocated yet but already claim their pool
+                    free.sort(key=lambda s: (
+                        self.committed_blocks(self.partition_of(s.k, s.b)),
+                        s.m, s.b))
+                    slot = None
+                    for cand in free:
+                        p = self.partition_of(cand.k, cand.b)
+                        if self.committed_blocks(p) + commit <= limit:
+                            slot = cand
+                            break
+                    if slot is None:  # per-arch pool backpressure: defer
+                        break
+                    free.remove(slot)
+                    slot.table = BlockTable(self.allocator,
+                                            self.partition_of(slot.k, slot.b))
+                    slot.block_commit = commit
+                self.queues[k].remove(req)
+                slot.request = req
+                slot.pos = 0
+                slot.chunks = self.split_chunks(req.prompt)
+                slot.generated = []
+                slot.admitted_tick = int(now)
+                admitted.append(slot)
         return admitted
 
     # -- wave planning -------------------------------------------------------
 
     def prefill_groups(self) -> dict:
         """{chunk_len: [slots]} for the cells whose next prompt chunk has
-        that length — one static-shape append call per key."""
+        that length — one static-shape append call per key (slots of every
+        trial row ride in the same call; the step carries a k index per cell)."""
         groups: dict = {}
         for s in self.slots:
             if s.prefilling:
@@ -202,5 +274,8 @@ class Batcher:
     def n_cells(self) -> int:
         return len(self.slots)
 
+    def queued(self) -> int:
+        return sum(len(q) for q in self.queues)
+
     def idle(self) -> bool:
-        return not self.queue and all(s.free for s in self.slots)
+        return self.queued() == 0 and all(s.free for s in self.slots)

@@ -4,53 +4,73 @@ The static path in ``launch/serve.py --static`` admits one fixed batch, runs
 prefill once, and decodes in lockstep — when a request finishes early its
 pipeline slot idles until the whole batch drains, the exact "idle slots"
 pathology the paper's shard parallelism exists to kill. This engine applies
-the same slot-filling insight to a *dynamic* request stream.
+the same slot-filling insight to a *dynamic* request stream — and, like the
+paper's gangs, to a dynamic stream addressed to *several model variants at
+once*: the slot grid is (trial k, microbatch m, batch-row b), trial row k
+holds variant k's weights, and the batcher routes each request's arch id to
+its own trial rows, so one gang-scheduled SPMD program co-serves K
+architectures (the serving analogue of Hydra/Saturn gang planning).
 
-Slot lifecycle (one cell = one (microbatch m, batch-row b) position of the
-pipelined serve step, owning one KV/SSM-cache row):
+Cell lifecycle (one cell = one (k, m, b) position of the pipelined serve
+step, owning one KV/SSM-cache row of trial k; requests with ``arch == k``
+are the only ones that ever occupy it):
 
   FREE ──admit──► PREFILL ──last chunk──► DECODE ──budget hit──► FREE
-   ▲   (queue head moves into the cell;       (one token per engine round │
-   │    cache row zeroed — KV rows beyond      via the masked decode      │
-   │    kv_len are never attended, but         step; per-row positions)   │
-   │    SSM states are recurrent and must                                 │
-   │    restart from zero)                                                │
+   ▲   (arch k's queue head moves into a       (one token per engine round │
+   │    free (k, m, b) cell; cache row          via the masked decode      │
+   │    zeroed — KV rows beyond kv_len are      step; per-row positions;   │
+   │    never attended, but SSM states are      every trial row decodes in │
+   │    recurrent and must restart from zero)   the same pipeline call)    │
    └──────────────────────────────────────────────────────────────────────┘
 
 Paged mode (``eng.paged``) replaces the per-cell dense cache strips with one
-shared block pool per layer (``serve/paging.py``); the cache column of the
+block pool per (trial, layer) (``serve/paging.py``) — the pool leaf carries a
+leading K axis, so each variant's blocks are physically its own slice and the
+allocator is partitioned per (trial, data-shard). The cache column of the
 lifecycle becomes block-table bookkeeping:
 
   FREE ──admit──► PREFILL ──last chunk──► DECODE ──budget hit──► FREE
-   ▲   (admission defers — backpressure —     (crossing a block boundary  │
-   │    until the request's exact block        allocs one block:          │
-   │    commitment fits the pool; each         alloc-on-append)           │
-   │    prefill chunk grows the cell's                                    │
-   │    block table; no cache zeroing —                                   │
-   │    stale blocks are masked by kv_len)                                │
+   ▲   (admission defers — per-arch           (crossing a block boundary  │
+   │    backpressure, other arches keep        allocs one block:          │
+   │    flowing — until the request's exact    alloc-on-append)           │
+   │    block commitment fits trial k's                                   │
+   │    partition; each prefill chunk grows                               │
+   │    the cell's block table; no cache                                  │
+   │    zeroing — stale blocks are masked                                 │
+   │    by kv_len)                                                        │
    └────────────── blocks returned to the allocator's free list ──────────┘
 
 Short requests then stop reserving ``max_seq``-worst-case HBM, so
 ``plan_serve_capacity(paged=True)`` packs strictly more concurrent cells
-into the same budget (admission by *expected* length against the pool).
+into the same budget (admission by *expected* length against the pool; a
+traffic ``mix`` sizes the grid for K arches' expected lengths and arrival
+weights at once).
 
 * **Admission / chunked prefill.** A prompt is split into
   ``EngineConfig.prefill_chunks`` near-equal chunks; each engine round
   advances every prefilling cell by one chunk via the ``append`` serve step
-  (per-row kv offsets — cells in the same call may sit at different depths).
-  Calls are grouped by chunk length so token shapes stay static; the final
-  chunk's head output is the request's first generated token.
+  (per-row kv offsets — cells in the same call may sit at different depths,
+  and cells of *different trial rows* ride in the same call: the step
+  indexes params, caches, and block tables by each cell's k). Calls are
+  grouped by chunk length so token shapes stay static; the final chunk's
+  head output is the request's first generated token. Admission order
+  within an arch follows the batcher ``policy`` (fcfs / sjf / deadline).
 * **Recycling.** The round a request exhausts its budget, its cell is
   released and the cache row is zeroed (``make_slot_reset``); the next
-  queued request is admitted the same round. Slots therefore never idle
-  while the queue is non-empty — steady-state occupancy stays ~1 where the
-  static path decays as a batch drains.
+  queued request of that arch is admitted the same round. Slots therefore
+  never idle while their arch's queue is non-empty — steady-state occupancy
+  stays ~1 where the static path decays as a batch drains.
+* **Sliding window.** ``eng.window`` > 0 (attention-only archs) bounds every
+  query to the trailing window: the cache keeps its absolute ``max_seq``
+  layout and the append/decode steps mask positions ≤ pos − window, so
+  greedy tokens match a windowed single-device oracle exactly.
 * **Exactness.** Every active row always processes exactly its own real
-  tokens at its own positions, so greedy tokens match the static-batch path
+  tokens at its own positions against its own trial's weights, so greedy
+  tokens match serving that row's arch alone through a single-arch engine
   (and the single-device oracle) per request, bit-for-bit.
 
 Per-request completion is exposed as :class:`repro.serve.request.Completion`
-records instead of lockstep tensors.
+records (with TTFT/TPOT tick latencies) instead of lockstep tensors.
 """
 from __future__ import annotations
 
@@ -69,6 +89,10 @@ from repro.serve.paging import BlockAllocator, blocks_for
 from repro.serve.request import Completion, Request
 
 
+def _pctl(samples, q) -> float:
+    return float(np.percentile(np.asarray(samples, np.float64), q))
+
+
 @dataclasses.dataclass
 class ServeStats:
     """Scheduling/throughput counters for one engine run."""
@@ -83,6 +107,9 @@ class ServeStats:
     occupancy_samples: list = dataclasses.field(default_factory=list)
     decode_busy_samples: list = dataclasses.field(default_factory=list)
     block_usage_samples: list = dataclasses.field(default_factory=list)
+    ttft_samples: list = dataclasses.field(default_factory=list)  # ticks
+    tpot_samples: list = dataclasses.field(default_factory=list)  # ticks
+    tokens_per_arch: dict = dataclasses.field(default_factory=dict)
 
     @property
     def slot_occupancy(self) -> float:
@@ -103,6 +130,13 @@ class ServeStats:
     def tokens_per_s(self) -> float:
         return self.tokens_generated / self.wall_s if self.wall_s > 0 else 0.0
 
+    def record_completion(self, comp: Completion) -> None:
+        self.ttft_samples.append(comp.ttft_ticks)
+        if len(comp.tokens) > 1:
+            self.tpot_samples.append(comp.tpot_ticks)
+        self.tokens_per_arch[comp.arch] = (
+            self.tokens_per_arch.get(comp.arch, 0) + len(comp.tokens))
+
     def summary(self) -> dict:
         out = {"ticks": self.ticks, "calls": self.calls,
                "tokens_generated": self.tokens_generated,
@@ -111,6 +145,16 @@ class ServeStats:
                "slot_occupancy": round(self.slot_occupancy, 4),
                "decode_occupancy": round(self.decode_occupancy, 4),
                "tokens_per_s": round(self.tokens_per_s, 2)}
+        if self.ttft_samples:
+            out["ttft_p50"] = round(_pctl(self.ttft_samples, 50), 2)
+            out["ttft_p95"] = round(_pctl(self.ttft_samples, 95), 2)
+        if self.tpot_samples:
+            out["tpot_p50"] = round(_pctl(self.tpot_samples, 50), 2)
+            out["tpot_p95"] = round(_pctl(self.tpot_samples, 95), 2)
+        if len(self.tokens_per_arch) > 1:
+            out["tokens_per_arch"] = {
+                k: self.tokens_per_arch[k]
+                for k in sorted(self.tokens_per_arch)}
         if self.block_usage_samples:
             out["peak_blocks_in_use"] = int(max(self.block_usage_samples))
             out["pool_stalls"] = self.pool_stalls
@@ -118,29 +162,34 @@ class ServeStats:
 
 
 class ServeEngine:
-    """Continuous-batching engine: request queue → pipeline slots.
+    """Continuous-batching engine: per-arch request queues → (k, m, b) cells.
 
-    Parameters mirror the static path: ``eng.n_microbatches`` × global
-    microbatch rows define the slot grid, ``eng.max_seq`` bounds each cache
-    row, ``eng.prefill_chunks`` sets the admission chunk count. ``eng`` is
-    normalized to one trial and spatial-chunking off (the engine chunks
-    *temporally*, across calls, so every microbatch slot owns one cache
-    group).
+    Parameters mirror the static path: ``eng.n_trials`` trial rows (one per
+    co-served model variant — ``params`` carries each variant's weights on
+    its leading K axis) × ``eng.n_microbatches`` × global microbatch rows
+    define the slot grid, ``eng.max_seq`` bounds each cache row,
+    ``eng.prefill_chunks`` sets the admission chunk count. ``eng`` is
+    normalized to spatial-chunking off (the engine chunks *temporally*,
+    across calls, so every microbatch slot owns one cache group).
+    ``policy`` picks the per-arch admission order (fcfs / sjf / deadline).
     """
 
     def __init__(self, cfg: ArchConfig, eng: pl.EngineConfig, mesh, params,
                  opts: Optional[ModelOptions] = None,
-                 overcommit: float = 1.0):
+                 overcommit: float = 1.0, policy: str = "fcfs"):
         if cfg.rope == "mrope" or cfg.frontend is not None:
             raise ValueError("continuous batching supports text-only archs; "
                              "use the static path for mrope/frontend models")
-        if eng.window:
-            raise ValueError("continuous batching does not support sliding-"
-                             "window caches yet (append-mode writes are not "
-                             "ring-buffered); see ROADMAP open items")
+        if eng.window and (cfg.family in ("ssm", "hybrid")
+                           or cfg.hybrid is not None):
+            raise ValueError(
+                "sliding-window continuous serving supports attention-only "
+                "archs (SSM state is not positional; the hybrid shared cache "
+                "is a window-sized ring the append step cannot address)")
         self.cfg = cfg
         self.opts = opts or ModelOptions()
-        self.eng = dataclasses.replace(eng, n_trials=1, prefill_chunks=1)
+        self.eng = dataclasses.replace(eng, prefill_chunks=1)
+        self.n_arches = self.eng.n_trials
         self.n_chunks = max(1, eng.prefill_chunks)
         self.mesh = mesh
         self.params = params
@@ -154,13 +203,14 @@ class ServeEngine:
         self.paged = bool(self.eng.paged)
         self.allocator = None
         if self.paged:
-            # one pool partition per data/pod shard: rows allocate only from
-            # the slice their shard owns (tables carry local ids)
+            # one pool partition per (trial, data/pod shard): each variant's
+            # pool leaf slice is its own, and rows allocate only from the
+            # partition their (k, shard) owns (tables carry local ids)
             n_parts = (1 if self.eng.batch_replicated
                        else self.eng.data_size * self.eng.pod_size)
-            self.allocator = BlockAllocator(self.eng.n_blocks,
-                                            self.eng.block_size,
-                                            n_partitions=n_parts)
+            self.allocator = BlockAllocator(
+                self.eng.n_blocks * self.n_arches, self.eng.block_size,
+                n_partitions=self.n_arches * n_parts)
             self.max_blocks = blocks_for(self.eng.max_seq,
                                          self.eng.block_size)
             # no slot reset: paged serving is attention-only (no recurrent
@@ -171,9 +221,10 @@ class ServeEngine:
         self.cache = pl.serve_cache_struct(cfg, self.eng, dry_run=False)
         self.batcher = Batcher(self.eng.n_microbatches, self.mb_global,
                                self.n_chunks, self.eng.max_seq,
+                               n_trials=self.n_arches,
                                allocator=self.allocator,
                                rows_per_partition=self.eng.microbatch,
-                               overcommit=overcommit)
+                               overcommit=overcommit, policy=policy)
         self.tick = 0
         self._stalled_ticks = 0
         self.stats = ServeStats()
@@ -243,24 +294,25 @@ class ServeEngine:
     # -- internals -----------------------------------------------------------
 
     def _grid(self, qlen: int):
-        m, b = self.eng.n_microbatches, self.mb_global
-        return (np.zeros((1, m, b, qlen), np.int32),
-                np.zeros((1, m, b), np.int32),
-                np.zeros((1, m, b), bool))
+        k, m, b = self.n_arches, self.eng.n_microbatches, self.mb_global
+        return (np.zeros((k, m, b, qlen), np.int32),
+                np.zeros((k, m, b), np.int32),
+                np.zeros((k, m, b), bool))
 
     def _reset_rows(self, slots) -> None:
-        mask = np.zeros((1, self.eng.n_microbatches, self.mb_global), bool)
+        mask = np.zeros((self.n_arches, self.eng.n_microbatches,
+                         self.mb_global), bool)
         for s in slots:
-            mask[0, s.m, s.b] = True
+            mask[s.k, s.m, s.b] = True
         self.cache = self.reset_fn(self.cache, jnp.asarray(mask))
 
     def _block_tables(self, slots):
-        """(1, M, mb_global, max_blocks) int32 local ids; rows not in the
+        """(K, M, mb_global, max_blocks) int32 local ids; rows not in the
         call stay -1 (their writes are dropped device-side anyway)."""
-        bt = np.full((1, self.eng.n_microbatches, self.mb_global,
+        bt = np.full((self.n_arches, self.eng.n_microbatches, self.mb_global,
                       self.max_blocks), -1, np.int32)
         for s in slots:
-            bt[0, s.m, s.b] = s.table.as_row(self.max_blocks)
+            bt[s.k, s.m, s.b] = s.table.as_row(self.max_blocks)
         return bt
 
     def _ensure_blocks(self, slots, extra) -> list:
@@ -279,9 +331,9 @@ class ServeEngine:
             return
         tokens, positions, active = self._grid(qlen)
         for s in slots:
-            tokens[0, s.m, s.b] = s.chunks[0]
-            positions[0, s.m, s.b] = s.pos
-            active[0, s.m, s.b] = True
+            tokens[s.k, s.m, s.b] = s.chunks[0]
+            positions[s.k, s.m, s.b] = s.pos
+            active[s.k, s.m, s.b] = True
         batch = {"tokens": jnp.asarray(tokens),
                  "positions": jnp.asarray(positions),
                  "active": jnp.asarray(active)}
@@ -294,7 +346,8 @@ class ServeEngine:
             s.chunks.pop(0)
             s.pos += qlen
             if not s.chunks:  # final chunk → first generated token
-                s.generated.append(int(tok[0, s.m, s.b]))
+                s.generated.append(int(tok[s.k, s.m, s.b]))
+                s.first_token_tick = self.tick
                 self.stats.tokens_generated += 1
                 self._maybe_finish(s)
 
@@ -307,9 +360,9 @@ class ServeEngine:
             return
         tokens, positions, active = self._grid(1)
         for s in slots:
-            tokens[0, s.m, s.b, 0] = s.generated[-1]
-            positions[0, s.m, s.b] = s.pos
-            active[0, s.m, s.b] = True
+            tokens[s.k, s.m, s.b, 0] = s.generated[-1]
+            positions[s.k, s.m, s.b] = s.pos
+            active[s.k, s.m, s.b] = True
         batch = {"tokens": jnp.asarray(tokens),
                  "positions": jnp.asarray(positions),
                  "active": jnp.asarray(active)}
@@ -322,7 +375,7 @@ class ServeEngine:
             len(slots) / self.batcher.n_cells)
         for s in slots:
             s.pos += 1
-            s.generated.append(int(tok[0, s.m, s.b]))
+            s.generated.append(int(tok[s.k, s.m, s.b]))
             self.stats.tokens_generated += 1
             self._maybe_finish(s)
 
@@ -330,11 +383,14 @@ class ServeEngine:
         if not slot.finished:
             return
         req = slot.request
-        self.completions.append(Completion(
+        comp = Completion(
             rid=req.rid, prompt_len=req.prompt_len,
             tokens=list(slot.generated[:req.max_new_tokens]),
             arrival=req.arrival, admitted_tick=slot.admitted_tick,
-            finished_tick=self.tick))
+            finished_tick=self.tick, arch=req.arch,
+            first_token_tick=slot.first_token_tick)
+        self.completions.append(comp)
+        self.stats.record_completion(comp)
         slot.release()  # the cell is reusable the same round it finishes
 
 
@@ -347,6 +403,7 @@ def static_serve(cfg: ArchConfig, eng: pl.EngineConfig, mesh, params,
                  requests, opts: Optional[ModelOptions] = None):
     """Lockstep static batching over the same slot grid, for comparison.
 
+    Single-arch (trial row 0 only — the lockstep baseline has no routing).
     Admits requests in consecutive groups of ``n_cells``, prefills each group
     at once (prompts must share one length — the static path's restriction),
     then decodes until EVERY request in the group hits its budget; early
@@ -404,13 +461,16 @@ def static_serve(cfg: ArchConfig, eng: pl.EngineConfig, mesh, params,
             pos += 1
         toks = np.stack(gen, axis=-1)  # (1, M, mbg, max_gen)
         for i, r in enumerate(group):
-            completions.append(Completion(
+            comp = Completion(
                 rid=r.rid, prompt_len=plen,
                 tokens=toks[0, i // mb_global, i % mb_global,
                             :r.max_new_tokens].tolist(),
                 arrival=r.arrival, admitted_tick=admitted_tick,
                 # the decode tick that produced the request's last token
                 # (its slot still idles until the group drains)
-                finished_tick=admitted_tick + r.max_new_tokens - 1))
+                finished_tick=admitted_tick + r.max_new_tokens - 1,
+                arch=r.arch, first_token_tick=admitted_tick)
+            completions.append(comp)
+            stats.record_completion(comp)
     stats.wall_s = time.monotonic() - t0
     return sorted(completions, key=lambda c: c.rid), stats

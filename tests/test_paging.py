@@ -175,6 +175,6 @@ def test_admission_balances_partitions():
         b.enqueue(mk_req(i, 5, 4))  # 8 tokens -> 2 of 4 blocks per partition
     admitted = b.admit(now=1.0)
     assert len(admitted) == 2
-    parts = sorted(b.partition_of(s.b) for s in admitted)
+    parts = sorted(b.partition_of(s.k, s.b) for s in admitted)
     assert parts == [0, 1]
     assert b.committed_blocks(0) == 2 and b.committed_blocks(1) == 2

@@ -167,6 +167,53 @@ def test_plan_serve_capacity_paged_admits_more_at_equal_budget():
     assert tiny.n_blocks // dp >= per_row
 
 
+def test_plan_serve_capacity_mix_sizes_a_gang():
+    """A traffic mix plans a K-trial co-serving gang: K trial rows, per-trial
+    pools, and a grid sized by the arrival-weighted expected lengths."""
+    cfg = ASSIGNED_ARCHS["chatglm3-6b"].reduced()
+    eng = base_eng()
+    max_seq = 256
+    est = sched.per_chip_bytes(cfg, dataclasses.replace(
+        eng, n_trials=1, n_microbatches=1), max_seq, train=False)
+    strip = eng.microbatch * max_seq * sched.kv_token_bytes_per_chip(cfg, eng)
+    budget = 2 * est.params_bytes + est.act_bytes + 6 * strip
+    mix = [(1.0, max_seq // 4), (1.0, max_seq // 4)]
+    gang = sched.plan_serve_capacity(cfg, eng, max_seq, paged=True, mix=mix,
+                                     hbm_bytes=budget, budget_fraction=1.0,
+                                     max_slots=64)
+    assert gang.n_trials == 2 and gang.paged and gang.n_blocks > 0
+    # per-trial pool: K pools of n_blocks must fit the leftover budget
+    dp = gang.data_size * gang.pod_size
+    token_b = sched.kv_token_bytes_per_chip(cfg, gang)
+    pool_bytes = 2 * (gang.n_blocks // dp) * gang.block_size * token_b
+    assert 2 * est.params_bytes + est.act_bytes + pool_bytes <= budget
+    # every (trial, shard) partition can still back one max_seq request
+    per_row = -(-max_seq // gang.block_size)
+    assert gang.n_blocks // dp >= per_row
+    # skewing the weights toward a long-prompt arch shrinks the grid: the
+    # weighted demand per row rises, so fewer cells fit the same pools
+    skew = sched.plan_serve_capacity(
+        cfg, eng, max_seq, paged=True,
+        mix=[(3.0, max_seq), (1.0, max_seq // 8)],
+        hbm_bytes=budget, budget_fraction=1.0, max_slots=64)
+    assert skew.n_microbatches <= gang.n_microbatches
+    # dense mix: K multiplies the per-trial strip cost, so the K=2 dense
+    # gang fits at most as many slots per trial as the single-arch plan
+    dense_one = sched.plan_serve_capacity(cfg, eng, max_seq,
+                                          hbm_bytes=budget,
+                                          budget_fraction=1.0, max_slots=64)
+    dense_two = sched.plan_serve_capacity(cfg, eng, max_seq,
+                                          mix=[(1.0, max_seq), (1.0, max_seq)],
+                                          hbm_bytes=budget,
+                                          budget_fraction=1.0, max_slots=64)
+    assert dense_two.n_trials == 2
+    assert dense_two.n_microbatches <= dense_one.n_microbatches
+    with pytest.raises(ValueError):
+        sched.plan_serve_capacity(cfg, eng, max_seq, mix=[])
+    with pytest.raises(ValueError):
+        sched.plan_serve_capacity(cfg, eng, max_seq, mix=[(-1.0, 8), (1.0, 8)])
+
+
 def test_plan_serve_capacity_monotone_in_seq():
     """Longer caches can only reduce how many slots fit."""
     cfg = ASSIGNED_ARCHS["yi-34b"]  # full-size: memory bound actually binds
