@@ -16,6 +16,12 @@ Three claims under test:
   the two single-arch engines back to back at the same HBM budget on
   aggregate tok/s (one compiled program, shared ticks, no second drain
   tail), with greedy tokens bit-identical per request.
+* ``serve/prefix_cache`` — the radix prefix cache: on a trace where 50% of
+  requests share a 12-token prompt prefix, cross-request KV sharing must
+  cut prefill slot-ticks — (cell, round) pairs spent prefilling, i.e. each
+  request's prefill-wave count summed — by >= 30% and lower mean TTFT
+  versus the same paged engine without the cache, at equal HBM (identical
+  pool) with greedy tokens bit-identical.
 
 ``serve/admission_policies`` additionally reports p95 TTFT for the
 fcfs / sjf / deadline batcher policies on one shared Poisson trace.
@@ -140,6 +146,55 @@ for policy in ("fcfs", "sjf", "deadline"):
     pol[policy] = {"ttft_p95": s.get("ttft_p95", -1.0),
                    "ttft_p50": s.get("ttft_p50", -1.0)}
 
+# --- radix prefix cache: 50%-shared-prefix trace, cache on vs off ---------
+# equal HBM by construction: the cache-on and cache-off runs use the SAME
+# paged engine config (same pool); only the radix tree + CoW forks differ
+PC_MAX, PC_BLOCK = 20, 4
+pc_eng = dataclasses.replace(base, n_microbatches=2, max_seq=PC_MAX,
+                             prefill_chunks=4, paged=True,
+                             block_size=PC_BLOCK, n_blocks=40)
+params_pc = pl.init_trial_params(cfg, pc_eng, plan, jax.random.PRNGKey(0),
+                                 max_pos=PC_MAX)
+rng_pc = np.random.default_rng(7)
+shared = rng_pc.integers(0, cfg.vocab_size, (12,)).astype(np.int32)
+
+
+def shared_prompt():
+    sfx = rng_pc.integers(0, cfg.vocab_size, (4,)).astype(np.int32)
+    return np.concatenate([shared, sfx])
+
+
+# a warm-up sharer at t=0 seeds the tree on completion; the measured stream
+# arrives later, alternating sharers (50%) and cold 16-token prompts
+pc_reqs = [Request(0, shared_prompt(), 4, arrival=0.0)]
+t_pc = 40.0
+for i in range(1, 17):
+    t_pc += float(rng_pc.exponential(1.0))
+    prompt = (shared_prompt() if i % 2 else
+              rng_pc.integers(0, cfg.vocab_size, (16,)).astype(np.int32))
+    pc_reqs.append(Request(i, prompt, 4, arrival=t_pc))
+e_nc = ServeEngine(cfg, pc_eng, mesh, params_pc, opts)
+comp_nc = e_nc.run(clone(pc_reqs))
+e_pc = ServeEngine(cfg, pc_eng, mesh, params_pc, opts, prefix_cache=True)
+comp_pc = e_pc.run(clone(pc_reqs))
+spc, snc = e_pc.stats.summary(), e_nc.stats.summary()
+pfx = {
+    "token_mismatches": sum(a.tokens != b.tokens
+                            for a, b in zip(comp_nc, comp_pc)),
+    "pool": f"{pc_eng.n_blocks}x{pc_eng.block_size}",
+    "prefill_slot_ticks_cache": spc["prefill_slot_ticks"],
+    "prefill_slot_ticks_nocache": snc["prefill_slot_ticks"],
+    "prefill_calls_cache": spc["prefill_calls"],
+    "prefill_calls_nocache": snc["prefill_calls"],
+    "ttft_mean_cache": round(float(np.mean(e_pc.stats.ttft_samples)), 2),
+    "ttft_mean_nocache": round(float(np.mean(e_nc.stats.ttft_samples)), 2),
+    "prefix_hits": spc["prefix_hits"],
+    "prefix_hit_tokens": spc["prefix_hit_tokens"],
+    "prefix_evictions": spc["prefix_evictions"],
+    "cow_forks": spc["cow_forks"],
+    "cache": spc, "nocache": snc,
+}
+
 # --- continuous vs static (uniform prompts, staggered budgets) ------------
 PROMPT, MAX_GEN, N_REQ = 8, 8, 18
 max_seq = PROMPT + MAX_GEN
@@ -163,7 +218,8 @@ mism = sum(a.tokens != b.tokens for a, b in zip(cont, stat))
 print(json.dumps({
     "token_mismatches": mism,
     "continuous": cs.summary(), "static": ss.summary(),
-    "paged_vs_dense": pvd, "multiarch": mvs, "policies": pol}))
+    "paged_vs_dense": pvd, "multiarch": mvs, "policies": pol,
+    "prefix": pfx}))
 """
 
 
@@ -245,6 +301,37 @@ def run() -> list:
     # with bit-identical greedy tokens per request
     if (mvs["token_mismatches"]
             or mvs["tokens_per_s_gang"] <= mvs["tokens_per_s_sequential"]):
+        row["us_per_call"] = -1
+    rows.append(row)
+    pfx = d["prefix"]
+    saved = 1.0 - (pfx["prefill_slot_ticks_cache"]
+                   / max(pfx["prefill_slot_ticks_nocache"], 1))
+    row = {
+        "name": "serve/prefix_cache",
+        "us_per_call": round(
+            1e6 / max(pfx["cache"]["tokens_per_s"], 1e-9), 1),
+        "derived": {
+            "pool": pfx["pool"],
+            "prefill_slot_ticks_cache": pfx["prefill_slot_ticks_cache"],
+            "prefill_slot_ticks_nocache": pfx["prefill_slot_ticks_nocache"],
+            "prefill_saved_frac": round(saved, 4),
+            "prefill_calls_cache": pfx["prefill_calls_cache"],
+            "prefill_calls_nocache": pfx["prefill_calls_nocache"],
+            "ttft_mean_cache": pfx["ttft_mean_cache"],
+            "ttft_mean_nocache": pfx["ttft_mean_nocache"],
+            "prefix_hits": pfx["prefix_hits"],
+            "prefix_hit_tokens": pfx["prefix_hit_tokens"],
+            "prefix_evictions": pfx["prefix_evictions"],
+            "cow_forks": pfx["cow_forks"],
+            "token_mismatches": pfx["token_mismatches"],
+        },
+    }
+    # the prefix-cache claim IS a failure condition: >= 30% fewer prefill
+    # slot-ticks and lower mean TTFT on the 50%-shared trace at equal HBM,
+    # with bit-identical greedy tokens and real hits
+    if (pfx["token_mismatches"] or pfx["prefix_hits"] == 0
+            or saved < 0.30
+            or pfx["ttft_mean_cache"] >= pfx["ttft_mean_nocache"]):
         row["us_per_call"] = -1
     rows.append(row)
     pol = d["policies"]

@@ -10,7 +10,10 @@ Prints ``name,us_per_call,derived`` CSV:
   roofline/*    §Roofline terms per (arch × shape) from the dry-run artifacts
 
 ``--json PATH`` additionally writes the rows as a JSON list (the nightly CI
-job uploads these as workflow artifacts for trend tracking).
+job uploads these as workflow artifacts for trend tracking) and, whenever
+any ``serve/*`` rows ran, a stable flat ``BENCH_serve.json`` at the repo
+root — one ``{row, metric, value, units}`` record per numeric result, so
+the serving perf trajectory diffs cleanly across PRs.
 
 Exit status: non-zero when any section raises or reports a failed row
 (``us_per_call`` < 0 — the per-bench error convention), so CI smoke jobs
@@ -19,6 +22,60 @@ catch regressions instead of reading a green harness over red rows.
 import json
 import os
 import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# units for the flat BENCH_serve.json schema, keyed by metric-name substring
+# (first match wins; unmatched numeric metrics are dimensionless counts)
+_UNITS = (
+    ("us_per_call", "us/call"),
+    ("tokens_per_s", "tok/s"),
+    ("ttft", "ticks"),
+    ("tpot", "ticks/token"),
+    ("wall_s", "s"),
+    ("occupancy", "fraction"),
+    ("frac", "fraction"),
+    ("_mb", "MiB"),
+    ("ticks", "ticks"),
+    ("calls", "calls"),
+    ("tokens", "tokens"),
+    ("blocks", "blocks"),
+)
+
+
+def _units_for(metric: str) -> str:
+    for sub, unit in _UNITS:
+        if sub in metric:
+            return unit
+    return "count"
+
+
+def write_bench_serve(rows, path) -> bool:
+    """Flatten the serve/* rows into the stable {row, metric, value, units}
+    schema tracked across PRs. Returns False — leaving any existing file
+    untouched — when no serve rows ran OR any serve row failed (us_per_call
+    < 0), so a crashed or gate-failing run never clobbers the last good
+    trajectory with error rows.
+    """
+    serve_rows = [r for r in rows if r["name"].startswith("serve/")]
+    if any(r["us_per_call"] < 0 for r in serve_rows):
+        return False
+    recs = []
+    for r in serve_rows:
+        recs.append({"row": r["name"], "metric": "us_per_call",
+                     "value": r["us_per_call"], "units": "us/call"})
+        for k in sorted(r["derived"]):
+            v = r["derived"][k]
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                continue
+            recs.append({"row": r["name"], "metric": k, "value": v,
+                         "units": _units_for(k)})
+    if not recs:
+        return False
+    with open(path, "w") as f:
+        json.dump(recs, f, indent=2)
+        f.write("\n")
+    return True
 
 
 def main() -> None:
@@ -68,6 +125,9 @@ def main() -> None:
             os.makedirs(d, exist_ok=True)
         with open(json_path, "w") as f:
             json.dump(all_rows, f, indent=2)
+        if write_bench_serve(all_rows, os.path.join(ROOT, "BENCH_serve.json")):
+            print(f"wrote BENCH_serve.json ({len(all_rows)} rows scanned)",
+                  file=sys.stderr)
     if failed:
         print(f"FAILED sections: {', '.join(failed)}", file=sys.stderr)
         sys.exit(1)

@@ -5,6 +5,8 @@ role played by ``core.trials``.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import os
 from typing import Optional, Sequence
 
 import jax
@@ -77,11 +79,22 @@ class HydraRunner:
                                     jnp.asarray(step, jnp.int32))
             return (p, o), metrics
 
+        # each gang owns a checkpoint subdirectory: restarts within one gang
+        # resume exactly, but a later gang (another rung of successive
+        # halving, a different K) can never restore a stale checkpoint whose
+        # trial axis doesn't match its own parameter shapes
+        ckpt_dir = self.hc.ckpt_dir
+        if ckpt_dir is not None:
+            tag = "|".join(t.tag or f"lr{t.lr:g}wd{t.weight_decay:g}s{t.seed}"
+                           for t in gang.trials)
+            digest = hashlib.md5(tag.encode()).hexdigest()[:8]
+            ckpt_dir = os.path.join(
+                ckpt_dir, f"{gang.arch}-k{eng.n_trials}-n{n_steps}-{digest}")
         report = run_with_restarts(
             one_step, (params, opt_state),
             LoopConfig(n_steps=n_steps,
                        checkpoint_every=self.hc.checkpoint_every,
-                       ckpt_dir=self.hc.ckpt_dir))
+                       ckpt_dir=ckpt_dir))
         data.close()
         params, opt_state = report.final_state
         if report.step_metrics:

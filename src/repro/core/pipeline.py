@@ -1017,6 +1017,46 @@ def make_slot_reset(cfg: ArchConfig, eng: EngineConfig, mesh,
     return jax.jit(mapped, donate_argnums=(0,))
 
 
+def make_block_copy(cfg: ArchConfig, eng: EngineConfig, mesh,
+                    jit: bool = True) -> Callable:
+    """Builds fn(cache, src, dst) copying pool blocks dst := src per layer.
+
+    The copy-on-write half of prefix sharing (serve/prefix_cache.py): before
+    a row may write into a partially-matched *shared* block (refcount > 1),
+    the engine forks it — allocates a private block and calls this to copy
+    the shared block's K/V rows into it, so no shared block is ever mutated.
+
+    ``src``/``dst``: (K, dp, n_copies) int32 *local* physical ids per
+    (trial, data-shard) pool partition, -1 = no-op padding. Copies apply to
+    every layer of the pool at once (a block id addresses the same slot of
+    each layer's pool leaf).
+    """
+    _check_paged_support(cfg, eng)
+    cspecs = serve_cache_pspecs(cfg, eng)
+    ispec = P(None, None if eng.batch_replicated else eng.dp_axes, None)
+
+    def inner(cache, src, dst):
+        s, d = src[:, 0], dst[:, 0]  # local shard: (K, n_copies)
+
+        def upd(buf):  # (K, Lp_local, nb_local, bs, h_kv, hd)
+            nb = buf.shape[2]
+
+            def one(bufk, sk, dk):
+                vals = jnp.take(bufk, jnp.clip(sk, 0, nb - 1), axis=1)
+                dk = jnp.where((sk >= 0) & (dk >= 0), dk, nb)  # OOB: dropped
+                return bufk.at[:, dk].set(vals, mode="drop")
+
+            return jax.vmap(one)(buf, s, d)
+
+        return {"layers": jax.tree.map(upd, cache["layers"]), "shared": None}
+
+    mapped = shard_map(inner, mesh=mesh, in_specs=(cspecs, ispec, ispec),
+                       out_specs=cspecs, check_vma=False)
+    if not jit:
+        return mapped
+    return jax.jit(mapped, donate_argnums=(0,))
+
+
 def batch_pspecs(cfg: ArchConfig, eng: EngineConfig, train: bool):
     """PartitionSpecs for the (K, M, batch, ...) slot-major batch arrays."""
     dp = P(None, None, None if eng.batch_replicated else eng.dp_axes)

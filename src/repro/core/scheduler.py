@@ -144,6 +144,7 @@ def plan_serve_capacity(cfg: ArchConfig, base_eng: EngineConfig,
                         hbm_bytes: Optional[int] = None,
                         budget_fraction: float = HBM_BUDGET_FRACTION,
                         mix: Optional[Sequence[tuple]] = None,
+                        hit_rate: float = 0.0,
                         ) -> EngineConfig:
     """Choose the serving slot grid for one model — or a co-serving gang.
 
@@ -175,7 +176,18 @@ def plan_serve_capacity(cfg: ArchConfig, base_eng: EngineConfig,
     need against its (trial, shard) partition and deferring that arch's
     admission when it would not fit (overcommit headroom is a batcher knob,
     see serve/paging.py).
+
+    ``hit_rate`` (paged only) is the expected fraction of prompt+generation
+    tokens served from shared radix-cached blocks (serve/prefix_cache.py):
+    a cached block is resident once no matter how many concurrent requests
+    read it, so each row's expected *new*-block demand shrinks by the hit
+    rate and the same pool backs proportionally more slots. Plan with the
+    traffic's measured prefix redundancy; the runtime batcher still commits
+    exact per-request (non-cached) needs, so an optimistic hit_rate degrades
+    to deferred admission, never to preemption.
     """
+    if not 0.0 <= hit_rate < 1.0:
+        raise ValueError(f"hit_rate must be in [0, 1), got {hit_rate}")
     budget = (HBM_BYTES_PER_CHIP if hbm_bytes is None
               else hbm_bytes) * budget_fraction
     if mix is not None:
@@ -220,7 +232,10 @@ def plan_serve_capacity(cfg: ArchConfig, base_eng: EngineConfig,
         local_blocks = max(
             int(budget - fixed) // (token_b * block_size * k_trials),
             per_row)
-        mean_demand = sum(demands) / k_trials
+        # prefix sharing: hit tokens ride on blocks resident once per
+        # partition, so only (1 - hit_rate) of each row's tokens demand
+        # fresh blocks
+        mean_demand = max(sum(demands) / k_trials * (1.0 - hit_rate), 1.0)
         m_cap = int(local_blocks * block_size
                     // (mean_demand * eng.microbatch))
         m = min(max_slots, max(1, m_cap))

@@ -21,6 +21,11 @@ comparison.
     ... python -m repro.launch.serve --arch chatglm3-6b --smoke \
         --arches 2 --paged --policy sjf --n-requests 16
 
+    # paged + radix prefix cache (cross-request KV sharing; plan the grid
+    # for the traffic's expected prefix redundancy)
+    ... python -m repro.launch.serve --arch chatglm3-6b --smoke \
+        --paged --prefix-cache --expected-hit-rate 0.5 --n-requests 16
+
     # sliding-window serving (attention archs; window < prompt+gen)
     ... python -m repro.launch.serve --arch chatglm3-6b --smoke \
         --window 8 --n-requests 12
@@ -105,6 +110,14 @@ def build_args():
     ap.add_argument("--overcommit", type=float, default=1.0,
                     help="paged admission headroom: commit up to this "
                     "fraction of each pool partition (1.0 = preemption-free)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="radix prefix cache over the paged block pool: "
+                    "completed prompts stay cached and new requests reuse "
+                    "shared-prefix KV blocks (requires --paged)")
+    ap.add_argument("--expected-hit-rate", type=float, default=0.0,
+                    help="expected prefix-cache hit fraction for paged "
+                    "capacity planning (shrinks per-row expected demand)")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 
@@ -124,6 +137,8 @@ def main():
     if args.paged and args.static:
         raise SystemExit("--static is the dense lockstep baseline; "
                          "drop --paged")
+    if args.prefix_cache and not args.paged:
+        raise SystemExit("--prefix-cache shares paged KV blocks; add --paged")
     if args.static and args.arches > 1:
         raise SystemExit("--static is single-arch lockstep batching; "
                          "multi-arch routing needs the continuous engine")
@@ -148,7 +163,8 @@ def main():
             mix = [(wi, exp or max_seq // 2) for wi in w]
         planned = sched.plan_serve_capacity(
             cfg, base, max_seq, paged=args.paged, expected_seq=exp,
-            block_size=args.block_size, max_slots=args.max_slots, mix=mix)
+            block_size=args.block_size, max_slots=args.max_slots, mix=mix,
+            hit_rate=args.expected_hit_rate if args.paged else 0.0)
         slots = min(planned.n_microbatches, args.max_slots)
         print(f"capacity plan: {planned.n_trials} trial row(s) x "
               f"{planned.n_microbatches} slots fit the HBM budget; "
@@ -216,10 +232,13 @@ def main():
         mode = "static"
     else:
         engine = ServeEngine(cfg, eng, mesh, params, opts,
-                             overcommit=args.overcommit, policy=args.policy)
+                             overcommit=args.overcommit, policy=args.policy,
+                             prefix_cache=args.prefix_cache)
         completions = engine.run(requests)
         stats = engine.stats
         mode = "continuous/paged" if args.paged else "continuous"
+        if args.prefix_cache:
+            mode += "+prefix-cache"
         if args.arches > 1:
             mode += f" x{args.arches}-arch gang"
 
@@ -247,6 +266,12 @@ def main():
         print(f"block pool: {eng.n_blocks} x {eng.block_size}-token blocks "
               f"per trial, peak in use {s.get('peak_blocks_in_use', 0)}, "
               f"pool stalls {s.get('pool_stalls', 0)}")
+    if args.prefix_cache:
+        print(f"prefix cache: {s.get('prefix_hits', 0)} hits "
+              f"({s.get('prefix_hit_tokens', 0)} tokens), "
+              f"{s.get('prefix_inserts', 0)} blocks cached, "
+              f"{s.get('prefix_evictions', 0)} evicted, "
+              f"{s.get('cow_forks', 0)} CoW forks")
 
 
 if __name__ == "__main__":

@@ -14,3 +14,4 @@ from repro.serve.paging import (  # noqa: F401
     BlockTable,
     blocks_for,
 )
+from repro.serve.prefix_cache import PrefixCache, PrefixHit  # noqa: F401

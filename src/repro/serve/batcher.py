@@ -21,6 +21,14 @@ head request cannot commit its blocks defers *only that arch's* admission —
 other arches keep admitting into their own partitions, so one overloaded
 variant can never starve the rest of the gang (the cross-arch guard the
 engine's stall detector backstops).
+
+With a radix ``prefix_cache`` (paged only), admission additionally matches
+each head request's prompt against every candidate partition's tree and
+commits only the *non-cached* block need: the slot is seeded with the shared
+prefix blocks, ``Slot.pos`` starts at the hit boundary, and the committed
+total counts each referenced cached block once across the partition's live
+slots (shared residency is charged exactly once; unreferenced cached blocks
+are evictable and never charged).
 """
 from __future__ import annotations
 
@@ -49,7 +57,10 @@ class Slot:
     admitted_tick: int = -1
     first_token_tick: int = -1  # tick the head emitted this request's first token
     table: Optional[BlockTable] = None  # paged: this request's block table
-    block_commit: int = 0  # paged: exact blocks this request will peak at
+    block_commit: int = 0  # paged: exact NEW blocks this request will peak at
+    cached_ids: set = dataclasses.field(default_factory=set)  # prefix-hit
+    # blocks this slot references (shared; charged once per partition)
+    hit_tokens: int = 0  # prefix-cache hit length (prefill starts here)
 
     @property
     def free(self) -> bool:
@@ -75,10 +86,12 @@ class Slot:
         self.generated = []
         self.admitted_tick = -1
         self.first_token_tick = -1
-        if self.table is not None:  # free-on-completion
+        if self.table is not None:  # drop references on completion
             self.table.close()
             self.table = None
         self.block_commit = 0
+        self.cached_ids = set()
+        self.hit_tokens = 0
 
 
 class Batcher:
@@ -110,11 +123,14 @@ class Batcher:
                  n_trials: int = 1,
                  allocator: Optional[BlockAllocator] = None,
                  rows_per_partition: int = 0, overcommit: float = 1.0,
-                 policy: str = "fcfs"):
+                 policy: str = "fcfs", prefix_cache=None):
         if policy not in POLICIES:
             raise ValueError(f"unknown admission policy {policy!r} "
                              f"(choose from {POLICIES})")
+        if prefix_cache is not None and allocator is None:
+            raise ValueError("prefix_cache requires a paged BlockAllocator")
         self.n_trials = n_trials
+        self.prefix_cache = prefix_cache
         self.n_microbatches = n_microbatches
         self.mb_global = mb_global
         self.prefill_chunks = max(1, prefill_chunks)
@@ -144,9 +160,25 @@ class Batcher:
         return k * self.n_shards + shard
 
     def committed_blocks(self, partition: int) -> int:
-        """Blocks promised to live requests in one pool partition."""
-        return sum(s.block_commit for s in self.slots
-                   if not s.free and self.partition_of(s.k, s.b) == partition)
+        """Blocks promised to live requests in one pool partition: each
+        slot's exact new-block commitment, plus every *referenced* cached
+        block counted once — shared prefix blocks are pinned (unevictable)
+        while a live slot reads them, so they charge the partition exactly
+        once no matter how many slots share them."""
+        total, referenced = 0, set()
+        for s in self.slots:
+            if s.free or self.partition_of(s.k, s.b) != partition:
+                continue
+            total += s.block_commit
+            referenced |= s.cached_ids
+        return total + len(referenced)
+
+    def _referenced_cached(self, partition: int) -> set:
+        out = set()
+        for s in self.slots:
+            if not s.free and self.partition_of(s.k, s.b) == partition:
+                out |= s.cached_ids
+        return out
 
     # -- queue ---------------------------------------------------------------
 
@@ -178,10 +210,21 @@ class Batcher:
 
     # -- admission -----------------------------------------------------------
 
-    def split_chunks(self, prompt: np.ndarray) -> list:
+    def split_chunks(self, prompt: np.ndarray, full_len: int = 0) -> list:
         """Near-equal prompt chunks (lengths differ by at most 1), so a trace
-        with L distinct prompt lengths compiles at most 2L append shapes."""
-        nc = min(self.prefill_chunks, prompt.shape[0])
+        with L distinct prompt lengths compiles at most 2L append shapes.
+
+        ``full_len`` > len(prompt) marks a prefix-cache hit: ``prompt`` is
+        the uncached suffix of a ``full_len``-token prompt, and the chunk
+        count shrinks proportionally (the suffix is split at the chunk size
+        the *full* prompt would have used) — a hit saves whole prefill
+        waves, not just tokens per wave."""
+        n = int(prompt.shape[0])
+        if full_len > n:
+            per_chunk = -(-full_len // self.prefill_chunks)
+            nc = min(max(1, -(-n // per_chunk)), n)
+        else:
+            nc = min(self.prefill_chunks, n)
         return [c for c in np.array_split(prompt, nc) if c.size]
 
     def _head(self, k: int, now: float) -> Optional[Request]:
@@ -209,7 +252,12 @@ class Batcher:
         head's exact block commitment fits none of the arch's partitions.
         Other arches continue admitting into their own partitions, so pool
         exhaustion in one variant never starves the rest of the gang.
-        Returns the newly admitted slots.
+
+        With a prefix cache, each candidate partition is first matched
+        against the head's prompt; cells are tried longest-hit-first (then
+        fewest-committed) and the admitted slot commits only its non-cached
+        block need, seeded with the shared prefix blocks at ``pos`` =
+        hit length. Returns the newly admitted slots.
         """
         admitted = []
         for k in range(self.n_trials):
@@ -221,36 +269,77 @@ class Batcher:
                 if self.allocator is None:
                     slot = free.pop(0)
                 else:
-                    commit = blocks_for(req.total_len,
-                                        self.allocator.block_size)
-                    limit = int(self.allocator.blocks_per_partition
-                                * self.overcommit)
-                    # balance by *committed* blocks, not the allocator's free
-                    # count — commitments from requests admitted earlier this
-                    # round have not allocated yet but already claim their pool
-                    free.sort(key=lambda s: (
-                        self.committed_blocks(self.partition_of(s.k, s.b)),
-                        s.m, s.b))
-                    slot = None
-                    for cand in free:
-                        p = self.partition_of(cand.k, cand.b)
-                        if self.committed_blocks(p) + commit <= limit:
-                            slot = cand
-                            break
+                    slot = self._place_paged(req, free)
                     if slot is None:  # per-arch pool backpressure: defer
                         break
                     free.remove(slot)
-                    slot.table = BlockTable(self.allocator,
-                                            self.partition_of(slot.k, slot.b))
-                    slot.block_commit = commit
                 self.queues[k].remove(req)
                 slot.request = req
-                slot.pos = 0
-                slot.chunks = self.split_chunks(req.prompt)
+                slot.pos = slot.hit_tokens
+                slot.chunks = self.split_chunks(req.prompt[slot.pos:],
+                                                full_len=req.prompt_len)
                 slot.generated = []
                 slot.admitted_tick = int(now)
                 admitted.append(slot)
         return admitted
+
+    def _place_paged(self, req: Request, free: list) -> Optional[Slot]:
+        """Pick and prepare a paged slot for ``req``: match the prefix cache
+        per candidate partition, charge the non-cached commitment, seed the
+        table. None = no partition fits (defer this arch)."""
+        bs = self.allocator.block_size
+        total_need = blocks_for(req.total_len, bs)
+        limit = int(self.allocator.blocks_per_partition * self.overcommit)
+        # per-partition state once per placement (candidate slots map onto
+        # only K*n_shards partitions — don't rescan the grid per candidate)
+        parts = {self.partition_of(c.k, c.b) for c in free}
+        committed, hits, pinned = {}, {}, {}
+        for p in parts:
+            committed[p] = self.committed_blocks(p)
+            if self.prefix_cache is not None:
+                hits[p] = self.prefix_cache.match(p, req.prompt)
+                pinned[p] = self._referenced_cached(p)
+
+        def hit_len(p):
+            return hits[p].hit_tokens if p in hits else 0
+
+        def fits(p):
+            # commitment = new blocks + cached blocks this request would pin
+            # that no live slot pins yet (pinned blocks charge once);
+            # committed_blocks() already balances by *committed* blocks, not
+            # the allocator's free count — commitments from requests admitted
+            # earlier this round have not allocated yet but already claim
+            # their pool
+            commit = total_need
+            fresh_refs = 0
+            if p in hits:
+                commit -= hits[p].n_full_blocks
+                fresh_refs = sum(1 for b in hits[p].block_ids
+                                 if b not in pinned[p])
+            return committed[p] + commit + fresh_refs <= limit
+
+        # longest hit first (prefix reuse beats perfect balance), then the
+        # partition with the fewest committed blocks
+        ordered = sorted(free, key=lambda s: (
+            -hit_len(self.partition_of(s.k, s.b)),
+            committed[self.partition_of(s.k, s.b)], s.m, s.b))
+        slot = next((c for c in ordered
+                     if fits(self.partition_of(c.k, c.b))), None)
+        if slot is None:
+            return None
+        p = self.partition_of(slot.k, slot.b)
+        slot.table = BlockTable(self.allocator, p, cache=self.prefix_cache)
+        slot.block_commit = total_need
+        slot.cached_ids = set()
+        slot.hit_tokens = 0
+        if p in hits and hits[p].hit_tokens > 0:
+            hit = hits[p]
+            self.prefix_cache.acquire(hit)
+            slot.table.seed(hit.block_ids)
+            slot.block_commit = total_need - hit.n_full_blocks
+            slot.cached_ids = set(hit.block_ids)
+            slot.hit_tokens = hit.hit_tokens
+        return slot
 
     # -- wave planning -------------------------------------------------------
 

@@ -46,6 +46,17 @@ into the same budget (admission by *expected* length against the pool; a
 traffic ``mix`` sizes the grid for K arches' expected lengths and arrival
 weights at once).
 
+Prefix caching (``prefix_cache=True``, paged only) adds cross-request KV
+sharing on top: completed requests insert their prompt blocks into a radix
+tree (``serve/prefix_cache.py``) instead of dropping them, admission matches
+each prompt against the tree and seeds the slot from the cached block table
+at ``pos`` = hit length (chunked prefill starts at the hit boundary — whole
+prefill waves are skipped, so TTFT drops with hit length), and a write into
+a partially-matched shared tail block first forks it copy-on-write via a
+device pool copy (``make_block_copy``) — greedy tokens stay bit-identical
+with the cache on or off. Unreferenced cached blocks are reclaimed LRU when
+the pool runs dry, so the cache never deadlocks admission.
+
 * **Admission / chunked prefill.** A prompt is split into
   ``EngineConfig.prefill_chunks`` near-equal chunks; each engine round
   advances every prefilling cell by one chunk via the ``append`` serve step
@@ -86,6 +97,7 @@ from repro.core import pipeline as pl
 from repro.models.layers import ModelOptions
 from repro.serve.batcher import Batcher
 from repro.serve.paging import BlockAllocator, blocks_for
+from repro.serve.prefix_cache import PrefixCache
 from repro.serve.request import Completion, Request
 
 
@@ -99,11 +111,21 @@ class ServeStats:
 
     ticks: int = 0
     calls: int = 0
+    prefill_calls: int = 0  # append-mode pipeline calls (prefill waves)
+    prefill_slot_ticks: int = 0  # (cell, round) pairs spent prefilling —
+    # the per-request prefill-tick total (calls group concurrent cells, so
+    # this is the measure a prefix-cache hit actually shrinks)
     tokens_generated: int = 0
     prompt_tokens: int = 0
     wall_s: float = 0.0
     peak_live: int = 0  # max concurrently admitted requests (capacity used)
     pool_stalls: int = 0  # paged: row-rounds deferred on an exhausted pool
+    prefix_enabled: bool = False  # radix prefix cache active
+    prefix_hits: int = 0  # admitted requests with a non-empty prefix hit
+    prefix_hit_tokens: int = 0  # prompt tokens served from cached blocks
+    prefix_inserts: int = 0  # blocks adopted into the radix tree
+    prefix_evictions: int = 0  # cached blocks reclaimed under pool pressure
+    cow_forks: int = 0  # shared tail blocks forked copy-on-write
     occupancy_samples: list = dataclasses.field(default_factory=list)
     decode_busy_samples: list = dataclasses.field(default_factory=list)
     block_usage_samples: list = dataclasses.field(default_factory=list)
@@ -139,6 +161,8 @@ class ServeStats:
 
     def summary(self) -> dict:
         out = {"ticks": self.ticks, "calls": self.calls,
+               "prefill_calls": self.prefill_calls,
+               "prefill_slot_ticks": self.prefill_slot_ticks,
                "tokens_generated": self.tokens_generated,
                "prompt_tokens": self.prompt_tokens,
                "peak_live": self.peak_live,
@@ -158,6 +182,12 @@ class ServeStats:
         if self.block_usage_samples:
             out["peak_blocks_in_use"] = int(max(self.block_usage_samples))
             out["pool_stalls"] = self.pool_stalls
+        if self.prefix_enabled:
+            out["prefix_hits"] = self.prefix_hits
+            out["prefix_hit_tokens"] = self.prefix_hit_tokens
+            out["prefix_inserts"] = self.prefix_inserts
+            out["prefix_evictions"] = self.prefix_evictions
+            out["cow_forks"] = self.cow_forks
         return out
 
 
@@ -176,7 +206,8 @@ class ServeEngine:
 
     def __init__(self, cfg: ArchConfig, eng: pl.EngineConfig, mesh, params,
                  opts: Optional[ModelOptions] = None,
-                 overcommit: float = 1.0, policy: str = "fcfs"):
+                 overcommit: float = 1.0, policy: str = "fcfs",
+                 prefix_cache: bool = False):
         if cfg.rope == "mrope" or cfg.frontend is not None:
             raise ValueError("continuous batching supports text-only archs; "
                              "use the static path for mrope/frontend models")
@@ -202,6 +233,9 @@ class ServeEngine:
             cfg, self.opts, self.eng, mesh, "append", with_active=True)
         self.paged = bool(self.eng.paged)
         self.allocator = None
+        if prefix_cache and not self.paged:
+            raise ValueError("the radix prefix cache shares paged KV blocks; "
+                             "enable eng.paged to use prefix_cache")
         if self.paged:
             # one pool partition per (trial, data/pod shard): each variant's
             # pool leaf slice is its own, and rows allocate only from the
@@ -218,16 +252,22 @@ class ServeEngine:
             self.reset_fn = None
         else:
             self.reset_fn = pl.make_slot_reset(cfg, self.eng, mesh)
+        self.prefix_cache = None
+        self.copy_fn = None
+        if prefix_cache:
+            self.prefix_cache = PrefixCache(self.allocator)
+            self.copy_fn = pl.make_block_copy(cfg, self.eng, mesh)
         self.cache = pl.serve_cache_struct(cfg, self.eng, dry_run=False)
         self.batcher = Batcher(self.eng.n_microbatches, self.mb_global,
                                self.n_chunks, self.eng.max_seq,
                                n_trials=self.n_arches,
                                allocator=self.allocator,
                                rows_per_partition=self.eng.microbatch,
-                               overcommit=overcommit, policy=policy)
+                               overcommit=overcommit, policy=policy,
+                               prefix_cache=self.prefix_cache)
         self.tick = 0
         self._stalled_ticks = 0
-        self.stats = ServeStats()
+        self.stats = ServeStats(prefix_enabled=prefix_cache)
         self.completions: list = []
 
     # -- public API ----------------------------------------------------------
@@ -289,6 +329,13 @@ class ServeEngine:
                     "lower it toward 1.0 or grow n_blocks)")
         else:
             self._stalled_ticks = 0
+        if self.prefix_cache is not None:
+            # synced at end of round so this tick's completions (inserts)
+            # and allocation-pressure evictions are already counted
+            self.stats.prefix_hits = self.prefix_cache.hits
+            self.stats.prefix_hit_tokens = self.prefix_cache.hit_tokens
+            self.stats.prefix_inserts = self.prefix_cache.inserts
+            self.stats.prefix_evictions = self.prefix_cache.evictions
         return True
 
     # -- internals -----------------------------------------------------------
@@ -323,7 +370,52 @@ class ServeEngine:
             return list(slots)
         ready = [s for s in slots if s.table.ensure(s.pos + extra)]
         self.stats.pool_stalls += len(slots) - len(ready)
+        return self._cow_forks(ready, extra)
+
+    def _cow_forks(self, slots, extra) -> list:
+        """Enforce the writer-exclusivity invariant: any *shared* block
+        (refcount > 1) overlapping a row's next write range [pos, pos+extra)
+        is forked — a private block is allocated, the shared block's K/V is
+        device-copied into it, and the table entry swaps — before the write
+        is issued. Only the partially-matched tail block of a prefix hit can
+        ever be shared in a write range, so forks are rare and batched into
+        one pool-copy call per engine round."""
+        if self.prefix_cache is None:
+            return list(slots)
+        ready, copies = [], []
+        for s in slots:
+            pairs = s.table.fork_shared(s.pos, s.pos + extra)
+            if pairs is None:  # pool can't back the fork: stall this row
+                self.stats.pool_stalls += 1
+                continue
+            for src, dst in pairs:
+                s.cached_ids.discard(src)  # no longer pinned by this slot
+                copies.append((s.k, s.b, src, dst))
+            ready.append(s)
+        if copies:
+            self._flush_copies(copies)
+            self.stats.cow_forks += len(copies)
         return ready
+
+    def _flush_copies(self, copies) -> None:
+        """Issue the batched device pool copies for this round's CoW forks.
+        src/dst are (K, dp, C) local ids per (trial, shard) partition, -1
+        padded; C is bucketed to powers of two to bound compile shapes."""
+        n_sh = self.batcher.n_shards
+        per: dict = {}
+        for k, b, src, dst in copies:
+            shard = self.batcher.partition_of(k, b) - k * n_sh
+            per.setdefault((k, shard), []).append((src, dst))
+        c = 1
+        while c < max(len(v) for v in per.values()):
+            c *= 2
+        src = np.full((self.n_arches, n_sh, c), -1, np.int32)
+        dst = np.full((self.n_arches, n_sh, c), -1, np.int32)
+        for (k, sh), pairs in per.items():
+            for j, (s_, d_) in enumerate(pairs):
+                src[k, sh, j], dst[k, sh, j] = s_, d_
+        self.cache = self.copy_fn(self.cache, jnp.asarray(src),
+                                  jnp.asarray(dst))
 
     def _prefill_call(self, qlen: int, slots) -> None:
         slots = self._ensure_blocks(slots, qlen)
@@ -342,6 +434,8 @@ class ServeEngine:
         self.cache, tok, _ = self.append_step(self.params, self.cache, batch)
         tok = np.asarray(tok)
         self.stats.calls += 1
+        self.stats.prefill_calls += 1
+        self.stats.prefill_slot_ticks += len(slots)
         for s in slots:
             s.chunks.pop(0)
             s.pos += qlen
@@ -383,6 +477,13 @@ class ServeEngine:
         if not slot.finished:
             return
         req = slot.request
+        if self.prefix_cache is not None:
+            # cache instead of free: adopt the request's full prompt blocks
+            # into the radix tree (they keep one tree reference when the
+            # table closes in release() below)
+            self.prefix_cache.insert(
+                self.batcher.partition_of(slot.k, slot.b),
+                req.prompt, slot.table.blocks)
         comp = Completion(
             rid=req.rid, prompt_len=req.prompt_len,
             tokens=list(slot.generated[:req.max_new_tokens]),

@@ -1,4 +1,4 @@
-"""Paged KV-cache bookkeeping: block pool, free-list allocator, block tables.
+"""Paged KV-cache bookkeeping: block pool, ref-counted allocator, block tables.
 
 The dense serve cache reserves one ``max_seq``-length strip per slot cell, so
 ``plan_serve_capacity`` must admit by worst-case length and a short request
@@ -6,8 +6,8 @@ strands the HBM behind its strip. Paging (vLLM-style) replaces the strips
 with one shared pool of fixed-size blocks per layer; each live request owns a
 *block table* — the ordered list of physical block ids backing its logical
 token positions — which grows one block at a time as chunked prefill and
-decode append tokens (alloc-on-append) and is returned to the free list the
-round the request completes (free-on-completion).
+decode append tokens (alloc-on-append) and drops its references the round
+the request completes.
 
 Everything here is host-side scheduling state (plain Python, no jax): the
 device side consumes the tables as ``(rows, max_blocks)`` int32 arrays whose
@@ -25,6 +25,36 @@ partition's pool — the backpressure that replaces worst-case ``max_seq``
 reservation. ``overcommit`` > 1 relaxes the committed-total gate (statistical
 packing); the allocator then backstops with per-append failures that stall a
 row until a completion frees blocks.
+
+Refcount / copy-on-write invariants (prefix sharing, see prefix_cache.py)
+-------------------------------------------------------------------------
+Blocks are **ref-counted** so one physical block can back the same logical
+prefix of several requests at once (and of the radix prefix cache between
+requests). The invariants every caller must preserve:
+
+  1. ``alloc`` hands out blocks at refcount 1; ``decref`` releases one
+     reference and the block returns to the free list only at refcount 0
+     (``free`` is the legacy alias for ``decref``). A block is *live* while
+     its refcount is >= 1 and is never handed out again until it drops to 0.
+  2. Decref of a non-live block raises (double-free guard): a table that
+     releases twice would let two requests share a block silently.
+  3. **Writers own their blocks exclusively**: no K/V write may target a
+     block whose refcount is > 1. Shared blocks are read-only; a request
+     about to write into a shared block must first *fork* it
+     (:meth:`BlockTable.fork_shared`) — allocate a fresh block, have the
+     engine issue a device-side pool copy, and drop its reference to the
+     shared original (copy-on-write). The device scatter itself never
+     touches positions below a row's ``kv_offset``, so full shared prefix
+     blocks are structurally write-free; only the partially-filled *tail*
+     block of a prefix hit can ever need the fork.
+  4. Shared reads are safe without copies: the gather path
+     (``blocks.paged_kv_update``) reads whole blocks through each row's
+     table and masks the garbage tail via ``kv_len``, so two tables holding
+     the same block id read the same bytes.
+  5. The radix prefix cache holds exactly one reference per cached block;
+     eviction (its LRU walk) may therefore reclaim only blocks at
+     refcount 1 — a cached block also referenced by a live request is
+     pinned until that request completes.
 """
 from __future__ import annotations
 
@@ -42,13 +72,13 @@ def blocks_for(n_tokens: int, block_size: int) -> int:
 
 
 class BlockAllocator:
-    """Free-list allocator over a pool of ``n_blocks`` fixed-size blocks.
+    """Ref-counted free-list allocator over ``n_blocks`` fixed-size blocks.
 
     ``n_partitions`` > 1 splits the pool into equal per-data-shard slices;
     every id handed out is local to its partition (0..n_blocks/P - 1).
-    Allocation is all-or-nothing and FIFO: freed blocks go to the tail of the
-    free list and are reused oldest-first, which keeps recycling deterministic
-    (tested) and spreads writes over the pool.
+    Allocation is all-or-nothing and FIFO: blocks that drop to refcount 0 go
+    to the tail of the free list and are reused oldest-first, which keeps
+    recycling deterministic (tested) and spreads writes over the pool.
     """
 
     def __init__(self, n_blocks: int, block_size: int, n_partitions: int = 1):
@@ -63,7 +93,7 @@ class BlockAllocator:
         self.blocks_per_partition = n_blocks // n_partitions
         self._free = [deque(range(self.blocks_per_partition))
                       for _ in range(n_partitions)]
-        self._live = [set() for _ in range(n_partitions)]
+        self._ref = [dict() for _ in range(n_partitions)]  # id -> refcount
 
     # -- queries -------------------------------------------------------------
 
@@ -74,20 +104,25 @@ class BlockAllocator:
 
     def used_blocks(self, partition: Optional[int] = None) -> int:
         if partition is None:
-            return sum(len(s) for s in self._live)
-        return len(self._live[partition])
+            return sum(len(r) for r in self._ref)
+        return len(self._ref[partition])
 
     def all_free(self) -> bool:
         return self.used_blocks() == 0
 
-    # -- alloc / free --------------------------------------------------------
+    def ref_count(self, block: int, partition: int = 0) -> int:
+        """Current refcount of a block (0 = free)."""
+        return self._ref[partition].get(block, 0)
+
+    # -- alloc / ref / free --------------------------------------------------
 
     def alloc(self, n: int, partition: int = 0) -> Optional[List[int]]:
-        """Pop ``n`` blocks from the partition's free list, oldest-first.
+        """Pop ``n`` blocks from the partition's free list, oldest-first,
+        each at refcount 1.
 
         All-or-nothing: returns None (and changes nothing) when fewer than
-        ``n`` blocks are free — the caller defers admission or stalls the
-        append until a completion frees blocks.
+        ``n`` blocks are free — the caller defers admission, evicts cached
+        prefixes, or stalls the append until references drop.
         """
         free = self._free[partition]
         if n < 0:
@@ -95,33 +130,62 @@ class BlockAllocator:
         if len(free) < n:
             return None
         ids = [free.popleft() for _ in range(n)]
-        self._live[partition].update(ids)
+        ref = self._ref[partition]
+        for i in ids:
+            ref[i] = 1
         return ids
 
-    def free(self, ids, partition: int = 0) -> None:
-        """Return blocks to the tail of the partition's free list.
-
-        Raises ValueError on double-free or unknown ids — a table that frees
-        twice would let two requests share a physical block silently.
-        """
-        live = self._live[partition]
+    def incref(self, ids, partition: int = 0) -> None:
+        """Add one reference per id (prefix sharing: a second request — or
+        the radix cache — adopts an already-live block read-only)."""
+        ref = self._ref[partition]
         for i in ids:
-            if i not in live:
+            if i not in ref:
+                raise ValueError(f"incref of free block {i} "
+                                 f"(partition {partition})")
+            ref[i] += 1
+
+    def decref(self, ids, partition: int = 0) -> List[int]:
+        """Drop one reference per id; blocks reaching refcount 0 return to
+        the tail of the partition's free list (and are reported back).
+
+        Raises ValueError on non-live ids — a table that releases twice
+        would let two requests share a physical block silently.
+        """
+        ref = self._ref[partition]
+        freed = []
+        for i in ids:
+            if i not in ref:
                 raise ValueError(f"double free of block {i} "
                                  f"(partition {partition})")
-            live.discard(i)
-            self._free[partition].append(i)
+            ref[i] -= 1
+            if ref[i] == 0:
+                del ref[i]
+                self._free[partition].append(i)
+                freed.append(i)
+        return freed
+
+    # legacy alias (PR-3 API): free-on-completion is now a refcount drop
+    free = decref
 
 
 class BlockTable:
     """Per-request view of the pool: ordered physical ids backing positions
-    [0, n_tokens). Grows via :meth:`ensure` (alloc-on-append) and returns its
-    blocks with :meth:`close` (free-on-completion).
+    [0, n_tokens). Grows via :meth:`ensure` (alloc-on-append) and drops its
+    references with :meth:`close` (on completion).
+
+    With a prefix cache, the leading entries may be *shared* blocks seeded
+    from a radix hit (:meth:`seed`); the caller must already hold a
+    reference on them (``PrefixCache.acquire``), which :meth:`close`
+    releases uniformly. ``cache`` is the optional prefix cache consulted to
+    evict unreferenced cached blocks when the free list runs dry.
     """
 
-    def __init__(self, allocator: BlockAllocator, partition: int = 0):
+    def __init__(self, allocator: BlockAllocator, partition: int = 0,
+                 cache=None):
         self.allocator = allocator
         self.partition = partition
+        self.cache = cache  # Optional[PrefixCache] — eviction on pressure
         self.blocks: List[int] = []
         self._closed = False
 
@@ -132,27 +196,77 @@ class BlockTable:
     def capacity_tokens(self) -> int:
         return len(self.blocks) * self.allocator.block_size
 
+    def seed(self, shared_ids) -> None:
+        """Prepend shared prefix blocks (a radix-cache hit). Must be called
+        on an empty table, and the caller must hold one reference per id —
+        :meth:`close` decrefs every entry uniformly."""
+        if self.blocks or self._closed:
+            raise RuntimeError("seed() on a non-empty or closed block table")
+        self.blocks.extend(shared_ids)
+
+    def _alloc(self, need: int) -> Optional[List[int]]:
+        got = self.allocator.alloc(need, self.partition)
+        if got is None and self.cache is not None:
+            # reclaim LRU unreferenced cached prefixes, then retry once
+            self.cache.make_room(self.partition, need)
+            got = self.allocator.alloc(need, self.partition)
+        return got
+
     def ensure(self, n_tokens: int) -> bool:
         """Grow the table to cover ``n_tokens`` positions; False = pool
-        exhausted (nothing allocated — retry after a completion frees blocks).
+        exhausted (nothing allocated — retry after references drop).
         """
         if self._closed:
             raise RuntimeError("ensure() on a closed block table")
         need = blocks_for(n_tokens, self.allocator.block_size) - len(self.blocks)
         if need <= 0:
             return True
-        got = self.allocator.alloc(need, self.partition)
+        got = self._alloc(need)
         if got is None:
             return False
         self.blocks.extend(got)
         return True
 
+    def fork_shared(self, t0: int, t1: int) -> Optional[list]:
+        """Copy-on-write: replace every *shared* block (refcount > 1)
+        overlapping token positions [t0, t1) with a fresh private block.
+
+        Returns the [(src, dst), ...] physical-id pairs the caller must
+        device-copy (pool row dst := pool row src) **before** the write that
+        motivated the fork, or None when the pool cannot back the fork right
+        now (nothing changed — stall and retry). Two-phase: the replacement
+        ids are allocated all-or-nothing first, so a failed fork never
+        leaves an un-copied private block in the table.
+        """
+        if self._closed:
+            raise RuntimeError("fork_shared() on a closed block table")
+        bs = self.allocator.block_size
+        idxs = [i for i in range(t0 // bs, blocks_for(t1, bs))
+                if i < len(self.blocks)
+                and self.allocator.ref_count(self.blocks[i],
+                                             self.partition) > 1]
+        if not idxs:
+            return []
+        got = self._alloc(len(idxs))
+        if got is None:
+            return None
+        pairs = []
+        for i, dst in zip(idxs, got):
+            src = self.blocks[i]
+            self.allocator.decref([src], self.partition)
+            self.blocks[i] = dst
+            pairs.append((src, dst))
+        return pairs
+
     def close(self) -> None:
-        """Free every block. Idempotent (a second close is a no-op, the
-        allocator itself rejects genuine double-frees)."""
+        """Drop this table's reference on every block. Idempotent (a second
+        close is a no-op, the allocator itself rejects genuine
+        double-frees). Shared blocks survive under their other references
+        (radix cache / other requests); private blocks return to the free
+        list."""
         if self._closed:
             return
-        self.allocator.free(self.blocks, self.partition)
+        self.allocator.decref(self.blocks, self.partition)
         self.blocks = []
         self._closed = True
 

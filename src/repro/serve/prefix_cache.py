@@ -1,0 +1,245 @@
+"""Radix prefix cache: cross-request KV sharing over the paged block pool.
+
+Real model-selection serving traffic is massively prefix-redundant — system
+prompts, few-shot scaffolds, and eval templates repeat across requests (and
+across the arches of a co-serving gang). This module lets a new request skip
+recomputing any prefix an earlier request already pushed through the model:
+completed requests *insert* their prompt blocks into a radix tree instead of
+freeing them, and admission *matches* each incoming prompt against the tree,
+seeding the request's block table with the shared blocks so chunked prefill
+starts at the hit boundary (TTFT drops with hit length).
+
+Structure
+---------
+One radix tree per pool **partition** (= per (trial, data-shard), matching
+``BlockAllocator`` partitioning — block ids are partition-local, so a cached
+block is only addressable by rows admitted into the same partition). Each
+edge/node covers exactly one **block-aligned chunk** of ``block_size`` token
+ids and owns one physical block whose K/V rows were written for exactly the
+token path root → node; causal attention makes that K/V valid for *any*
+request whose prompt starts with the same path.
+
+Sharing rules (the refcount/CoW invariants of serve/paging.py):
+
+* the tree holds **one reference** per cached block; a radix hit adds one
+  reference per matched block for the admitted request (dropped when its
+  table closes), so a block's refcount is 1 + (live requests reading it);
+* full-block hits are read-only forever — the device scatter never writes
+  below a row's ``kv_offset``;
+* a **partial tail hit** (the request's prompt diverges inside a cached
+  block) reuses the matched positions of that block but must write the rest:
+  the engine forks it copy-on-write (``BlockTable.fork_shared`` + a device
+  pool copy) before the first write, so no block with refcount > 1 is ever
+  mutated;
+* **eviction** reclaims LRU *leaves* whose block is referenced only by the
+  tree (refcount 1) — interior nodes are path-pinned by their children and
+  blocks referenced by live requests are pinned until completion. Eviction
+  runs on demand when the free list cannot back an allocation
+  (``BlockTable`` calls :meth:`make_room`).
+
+Host-side only: matching, refcounts, and eviction are plain Python; the sole
+device interaction is the CoW pool copy, compiled by
+``core.pipeline.make_block_copy`` and issued by the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.serve.paging import BlockAllocator
+
+
+class RadixNode:
+    """One cached block: ``key`` is its block-aligned token chunk, ``block``
+    the partition-local physical id holding that chunk's K/V."""
+
+    __slots__ = ("key", "block", "children", "parent", "last_used")
+
+    def __init__(self, key: Tuple[int, ...], block: int,
+                 parent: Optional["RadixNode"], last_used: int = 0):
+        self.key = key
+        self.block = block
+        self.children: Dict[Tuple[int, ...], RadixNode] = {}
+        self.parent = parent
+        self.last_used = last_used
+
+
+@dataclasses.dataclass
+class PrefixHit:
+    """Result of matching one prompt against one partition's radix tree.
+
+    ``nodes`` is the chain of fully matched blocks (each ``block_size``
+    tokens); ``tail``/``tail_tokens`` an optional partially matched block —
+    its first ``tail_tokens`` positions carry valid K/V for this prompt and
+    the engine must CoW-fork it before writing the rest. The hit is always
+    capped below ``prompt_len`` so at least one prompt token remains to
+    prefill (the head needs a final-position forward to emit token 0).
+    """
+
+    partition: int
+    nodes: List[RadixNode]
+    tail: Optional[RadixNode]
+    tail_tokens: int
+    block_size: int
+
+    @property
+    def hit_tokens(self) -> int:
+        return len(self.nodes) * self.block_size + self.tail_tokens
+
+    @property
+    def n_full_blocks(self) -> int:
+        return len(self.nodes)
+
+    @property
+    def block_ids(self) -> List[int]:
+        ids = [n.block for n in self.nodes]
+        if self.tail is not None:
+            ids.append(self.tail.block)
+        return ids
+
+
+class PrefixCache:
+    """Per-partition radix trees over the shared block pool, with LRU
+    eviction of unreferenced leaves. See the module docstring for the
+    sharing/eviction rules; counters (hits, evictions, ...) feed
+    ``ServeStats``."""
+
+    def __init__(self, allocator: BlockAllocator):
+        self.allocator = allocator
+        self._roots = [RadixNode((), -1, None)
+                       for _ in range(allocator.n_partitions)]
+        self._clock = 0  # deterministic LRU time (bumped per touch/insert)
+        self.lookups = 0
+        self.hits = 0  # matches with hit_tokens > 0 that were acquired
+        self.hit_tokens = 0
+        self.inserts = 0  # blocks adopted into the tree
+        self.evictions = 0  # blocks reclaimed by LRU eviction
+
+    # -- queries -------------------------------------------------------------
+
+    def cached_blocks(self, partition: Optional[int] = None) -> int:
+        """Blocks currently held by the tree (1 per node)."""
+        parts = (range(self.allocator.n_partitions) if partition is None
+                 else [partition])
+        total = 0
+        for p in parts:
+            stack = [self._roots[p]]
+            while stack:
+                node = stack.pop()
+                stack.extend(node.children.values())
+                total += node is not self._roots[p]
+        return total
+
+    # -- match / acquire -----------------------------------------------------
+
+    def match(self, partition: int, prompt) -> PrefixHit:
+        """Longest cached prefix of ``prompt`` in this partition's tree:
+        a chain of full block-aligned chunks plus at most one partially
+        matched tail block. Read-only (no refcounts change, no LRU touch) —
+        admission may probe several partitions before committing to one via
+        :meth:`acquire`."""
+        bs = self.allocator.block_size
+        plen = int(prompt.shape[0])
+        self.lookups += 1
+        node = self._roots[partition]
+        nodes: List[RadixNode] = []
+        i = 0
+        while (i + 1) * bs <= plen:
+            child = node.children.get(tuple(int(t) for t in
+                                            prompt[i * bs:(i + 1) * bs]))
+            if child is None:
+                break
+            nodes.append(child)
+            node = child
+            i += 1
+        # leave at least one prompt token to prefill (head output = token 0)
+        while nodes and len(nodes) * bs >= plen:
+            nodes.pop()
+        node = nodes[-1] if nodes else self._roots[partition]
+        base = len(nodes) * bs
+        rest = prompt[base:]
+        # partial tail: longest common prefix with any child chunk, again
+        # capped one short of the prompt end
+        limit = min(int(rest.shape[0]) - 1, bs)
+        tail, tail_tokens = None, 0
+        for key, child in node.children.items():
+            j = 0
+            while j < limit and key[j] == int(rest[j]):
+                j += 1
+            if j > tail_tokens:
+                tail, tail_tokens = child, j
+        return PrefixHit(partition, nodes, tail, tail_tokens, bs)
+
+    def acquire(self, hit: PrefixHit) -> None:
+        """Commit to a hit at admission: add one reference per matched block
+        (the request's table drops it on close) and refresh LRU stamps."""
+        ids = hit.block_ids
+        if not ids:
+            return
+        self.allocator.incref(ids, hit.partition)
+        self.hits += 1
+        self.hit_tokens += hit.hit_tokens
+        self._clock += 1
+        for n in hit.nodes:
+            n.last_used = self._clock
+        if hit.tail is not None:
+            hit.tail.last_used = self._clock
+
+    # -- insert --------------------------------------------------------------
+
+    def insert(self, partition: int, prompt, blocks: List[int]) -> int:
+        """Adopt a completed request's *full* prompt blocks into the tree
+        (called before its table closes, so every id in ``blocks`` is still
+        live). Chunks already cached keep their existing node — the
+        request's duplicate block simply drops with its table. Returns the
+        number of newly adopted blocks."""
+        bs = self.allocator.block_size
+        node = self._roots[partition]
+        adopted = 0
+        self._clock += 1
+        for i in range(int(prompt.shape[0]) // bs):
+            if i >= len(blocks):
+                break
+            key = tuple(int(t) for t in prompt[i * bs:(i + 1) * bs])
+            child = node.children.get(key)
+            if child is None:
+                child = RadixNode(key, blocks[i], node, self._clock)
+                node.children[key] = child
+                self.allocator.incref([blocks[i]], partition)
+                adopted += 1
+            child.last_used = self._clock
+            node = child
+        self.inserts += adopted
+        return adopted
+
+    # -- eviction ------------------------------------------------------------
+
+    def _evictable_leaves(self, partition: int) -> List[RadixNode]:
+        out = []
+        stack = [self._roots[partition]]
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            if (node.parent is not None and not node.children
+                    and self.allocator.ref_count(node.block, partition) == 1):
+                out.append(node)
+        return out
+
+    def make_room(self, partition: int, need: int) -> int:
+        """Evict LRU unreferenced leaves until ``need`` blocks are free in
+        the partition (or nothing evictable remains). Evicting a leaf may
+        expose its parent as the next victim — cascades are rediscovered per
+        round, which keeps the walk simple (trees are pool-bounded small).
+        Returns the number of blocks reclaimed."""
+        evicted = 0
+        while self.allocator.free_blocks(partition) < need:
+            leaves = self._evictable_leaves(partition)
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda n: n.last_used)
+            del victim.parent.children[victim.key]
+            victim.parent = None
+            self.allocator.decref([victim.block], partition)
+            evicted += 1
+        self.evictions += evicted
+        return evicted

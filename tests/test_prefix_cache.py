@@ -1,0 +1,398 @@
+"""Radix prefix cache: allocator refcounts, radix match/insert/LRU-eviction,
+copy-on-write forking of shared tail blocks, hit-aware batcher admission —
+plus engine-level greedy parity (cache on == cache off == oracle, including
+under CoW forks) and eviction under pool pressure with per-arch fairness.
+
+Host-side sections run in milliseconds; the engine sections compile the
+pipelined serve steps (multi-device setup from tests/conftest.py).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS
+from repro.core import pipeline as pl
+from repro.core.partitioner import plan_stages
+from repro.launch.mesh import make_test_mesh
+from repro.models import lm
+from repro.models.layers import ModelOptions
+from repro.serve import (Batcher, BlockAllocator, BlockTable, PrefixCache,
+                         Request, ServeEngine)
+
+MAX_SEQ = 24
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator refcounts
+# ---------------------------------------------------------------------------
+
+
+def test_refcounts_share_and_release():
+    a = BlockAllocator(n_blocks=6, block_size=4)
+    ids = a.alloc(2)
+    assert [a.ref_count(i) for i in ids] == [1, 1]
+    a.incref(ids)  # a second reader (prefix sharing)
+    assert a.decref(ids) == []  # still live under the first reference
+    assert a.used_blocks() == 2
+    assert a.decref(ids) == ids  # last reference: back to the free list
+    assert a.all_free()
+    with pytest.raises(ValueError):
+        a.decref([ids[0]])  # double free still rejected
+    with pytest.raises(ValueError):
+        a.incref([ids[0]])  # incref of a free block is a bug
+
+
+def test_shared_block_never_rehanded_out():
+    a = BlockAllocator(n_blocks=2, block_size=4)
+    ids = a.alloc(2)
+    a.incref([ids[0]])
+    a.decref(ids)  # ids[1] freed, ids[0] still referenced
+    assert a.alloc(2) is None  # only one block is actually free
+    assert a.alloc(1) == [ids[1]]
+
+
+# ---------------------------------------------------------------------------
+# Radix tree: match / insert / LRU eviction
+# ---------------------------------------------------------------------------
+
+
+def _prompt(tokens):
+    return np.asarray(tokens, np.int32)
+
+
+def _cache_prompt(alloc, pc, prompt, partition=0):
+    """Run one request's life host-side: alloc blocks, insert, release."""
+    t = BlockTable(alloc, partition, cache=pc)
+    assert t.ensure(int(prompt.shape[0]))
+    pc.insert(partition, prompt, t.blocks)
+    t.close()
+    return t
+
+
+def test_match_full_blocks_and_partial_tail():
+    alloc = BlockAllocator(16, 4)
+    pc = PrefixCache(alloc)
+    _cache_prompt(alloc, pc, _prompt(range(14)))  # 3 full blocks cached
+    assert pc.cached_blocks() == 3
+    # 10 shared tokens: 2 full blocks + 2 tokens into the third
+    hit = pc.match(0, _prompt(list(range(10)) + [99, 98]))
+    assert hit.n_full_blocks == 2 and hit.tail_tokens == 2
+    assert hit.hit_tokens == 10 and len(hit.block_ids) == 3
+    # no hit for a diverging prompt
+    assert pc.match(0, _prompt([55] * 12)).hit_tokens == 0
+
+
+def test_match_capped_below_prompt_len():
+    """A fully cached prompt must still leave >= 1 token to prefill (the
+    head emits the first token from the final prompt position)."""
+    alloc = BlockAllocator(16, 4)
+    pc = PrefixCache(alloc)
+    _cache_prompt(alloc, pc, _prompt(range(12)))
+    hit = pc.match(0, _prompt(range(12)))  # identical, block-aligned
+    assert hit.hit_tokens == 11  # 2 full blocks + 3 of the last
+    assert hit.n_full_blocks == 2 and hit.tail_tokens == 3
+
+
+def test_insert_dedupes_existing_chunks():
+    alloc = BlockAllocator(16, 4)
+    pc = PrefixCache(alloc)
+    _cache_prompt(alloc, pc, _prompt(range(8)))
+    used = alloc.used_blocks()
+    # a second identical prompt adopts nothing: its blocks drop with it
+    _cache_prompt(alloc, pc, _prompt(range(8)))
+    assert alloc.used_blocks() == used and pc.cached_blocks() == 2
+
+
+def test_lru_eviction_leaf_first_and_pinned_blocks_skipped():
+    alloc = BlockAllocator(8, 4)
+    pc = PrefixCache(alloc)
+    _cache_prompt(alloc, pc, _prompt(range(8)))        # chain A: 2 blocks
+    _cache_prompt(alloc, pc, _prompt([50 + i for i in range(8)]))  # chain B
+    assert alloc.used_blocks() == 4 and alloc.free_blocks() == 4
+    # pin chain A via a live hit so chain B's leaf is the LRU victim
+    hit = pc.match(0, _prompt(list(range(8)) + [1]))
+    pc.acquire(hit)
+    # drain the pool, then ask for one more: B's leaf must go first
+    alloc.alloc(4)
+    t = BlockTable(alloc, cache=pc)
+    assert t.ensure(4)
+    assert pc.evictions == 1
+    assert pc.match(0, _prompt([50 + i for i in range(8)] + [1])).hit_tokens \
+        == 4  # B's root block survives, its leaf is gone
+    # chain A is pinned by the live hit (refcount 2): not evictable — only
+    # B's root can go, which is one short of the two blocks needed
+    t2 = BlockTable(alloc, cache=pc)
+    assert not t2.ensure(8)
+    assert pc.match(0, _prompt(list(range(8)) + [1])).hit_tokens == 8
+
+
+# ---------------------------------------------------------------------------
+# Copy-on-write forking
+# ---------------------------------------------------------------------------
+
+
+def test_fork_shared_replaces_only_shared_blocks():
+    alloc = BlockAllocator(16, 4)
+    pc = PrefixCache(alloc)
+    _cache_prompt(alloc, pc, _prompt(range(14)))
+    hit = pc.match(0, _prompt(list(range(10)) + [99, 98]))
+    pc.acquire(hit)
+    t = BlockTable(alloc, cache=pc)
+    t.seed(hit.block_ids)
+    assert t.ensure(12)
+    shared_tail = t.blocks[2]
+    assert alloc.ref_count(shared_tail) == 2  # tree + this table
+    # writing tokens [10, 12) overlaps only the tail block
+    pairs = t.fork_shared(10, 12)
+    assert len(pairs) == 1 and pairs[0][0] == shared_tail
+    assert t.blocks[2] == pairs[0][1] != shared_tail
+    assert alloc.ref_count(shared_tail) == 1  # back to tree-only
+    assert alloc.ref_count(t.blocks[2]) == 1  # private to the writer
+    # full-hit blocks stay shared and untouched
+    assert t.blocks[:2] == [n.block for n in hit.nodes]
+    assert t.fork_shared(12, 16) == []  # nothing shared in later ranges
+    t.close()
+
+
+def test_fork_shared_is_atomic_under_exhaustion():
+    alloc = BlockAllocator(4, 4)
+    pc = PrefixCache(alloc)
+    _cache_prompt(alloc, pc, _prompt(range(8)))
+    hit = pc.match(0, _prompt(list(range(6)) + [9]))
+    assert hit.n_full_blocks == 1 and hit.tail_tokens == 2
+    pc.acquire(hit)
+    t = BlockTable(alloc, cache=pc)
+    t.seed(hit.block_ids)
+    # drain the pool so the fork cannot allocate (cached blocks are pinned)
+    held = alloc.alloc(2)
+    assert t.fork_shared(6, 7) is None  # stall signal...
+    assert alloc.ref_count(hit.tail.block) == 2  # ...and nothing changed
+    alloc.decref(held)
+    assert len(t.fork_shared(6, 7)) == 1  # retry succeeds
+    t.close()
+
+
+# ---------------------------------------------------------------------------
+# Batcher admission with the prefix cache
+# ---------------------------------------------------------------------------
+
+
+def _req(rid, prompt, gen=3, arrival=0.0, arch=0):
+    return Request(rid, _prompt(prompt), gen, arrival=arrival, arch=arch)
+
+
+def test_admission_commits_only_non_cached_need():
+    alloc = BlockAllocator(16, 4)
+    pc = PrefixCache(alloc)
+    b = Batcher(n_microbatches=2, mb_global=2, prefill_chunks=2, max_seq=32,
+                allocator=alloc, prefix_cache=pc)
+    _cache_prompt(alloc, pc, _prompt(range(12)))
+    assert b.admit(1.0) == []  # nothing queued yet
+    # 10 cached of 12 prompt tokens; total 14 -> 4 blocks, 2 full cached
+    b.enqueue(_req(0, list(range(10)) + [77, 66]))
+    slot = b.admit(1.0)[0]
+    assert slot.hit_tokens == 10 and slot.pos == 10
+    assert slot.block_commit == 2  # 4 total - 2 full cached
+    assert len(slot.cached_ids) == 3  # 2 full + shared tail
+    assert sum(c.shape[0] for c in slot.chunks) == 2  # suffix only
+    # referenced cached blocks charge the partition once
+    assert b.committed_blocks(0) == 2 + 3
+    # a second sharer adds only its own commit (cached ids already pinned)
+    b.enqueue(_req(1, list(range(10)) + [11, 22]))
+    slot2 = b.admit(2.0)[0]
+    assert slot2.hit_tokens == 10
+    assert b.committed_blocks(0) == 2 + 2 + 3
+
+
+def test_admission_defers_when_pinned_cache_exceeds_pool():
+    """Cached blocks a request would pin count against the partition: a hit
+    does not let the committed total overrun the pool."""
+    alloc = BlockAllocator(4, 4)
+    pc = PrefixCache(alloc)
+    b = Batcher(n_microbatches=2, mb_global=1, prefill_chunks=1, max_seq=16,
+                allocator=alloc, prefix_cache=pc)
+    _cache_prompt(alloc, pc, _prompt(range(8)))  # 2 cached blocks
+    b.enqueue(_req(0, list(range(8)) + [3, 4], gen=5))  # 14 tok -> 4 blocks
+    slot = b.admit(1.0)[0]
+    # 2 new + 2 pinned cached = 4 = full partition
+    assert b.committed_blocks(0) == 4
+    b.enqueue(_req(1, [91, 92, 93, 94], gen=2))  # 2 more blocks: no room
+    assert b.admit(2.0) == []
+    slot.release()
+    assert [s.request.rid for s in b.admit(3.0)] == [1]
+
+
+def test_prefix_pressure_preserves_per_arch_fairness():
+    """Arch 0's partition full of pinned cached prefixes defers only arch 0;
+    arch 1 keeps admitting into its own partition (the PR-4 guarantee must
+    survive blocks that outlive their requests)."""
+    alloc = BlockAllocator(8, 4, n_partitions=2)
+    pc = PrefixCache(alloc)
+    b = Batcher(n_microbatches=2, mb_global=1, prefill_chunks=1, max_seq=16,
+                n_trials=2, allocator=alloc, prefix_cache=pc)
+    _cache_prompt(alloc, pc, _prompt(range(8)), partition=0)
+    # arch 0: hits 8 tokens, pins 2 cached + commits 1 new = 3 of 4
+    b.enqueue(_req(0, list(range(8)) + [1, 2], gen=3, arch=0))
+    # arch 0 second request (2 blocks): deferred, 3 + 2 > 4
+    b.enqueue(_req(1, [71, 72, 73, 74], gen=2, arch=0))
+    # arch 1: unaffected by arch 0's cached blocks
+    b.enqueue(_req(2, [81, 82, 83, 84], gen=2, arch=1))
+    admitted = b.admit(1.0)
+    by_arch = {k: [s.request.rid for s in admitted if s.k == k]
+               for k in (0, 1)}
+    assert by_arch[0] == [0] and by_arch[1] == [2]
+
+
+# ---------------------------------------------------------------------------
+# Engine: greedy parity + eviction under pressure (device side)
+# ---------------------------------------------------------------------------
+
+
+def build(n_stages=2, data_size=1, slots=2, microbatch=2, n_trials=1,
+          block_size=4, n_blocks=24):
+    cfg = ASSIGNED_ARCHS["chatglm3-6b"].reduced()
+    opts = ModelOptions()
+    mesh = make_test_mesh(data_size, n_stages)
+    eng = pl.EngineConfig(n_trials=n_trials, n_microbatches=slots,
+                          microbatch=microbatch, n_stages=n_stages,
+                          data_size=data_size, max_seq=MAX_SEQ,
+                          cache_dtype=jnp.float32, prefill_chunks=2,
+                          paged=True, block_size=block_size,
+                          n_blocks=n_blocks)
+    plan = plan_stages(cfg, eng.n_stages)
+    params = pl.init_trial_params(cfg, eng, plan, jax.random.PRNGKey(0),
+                                  max_pos=MAX_SEQ)
+    return cfg, opts, mesh, eng, params
+
+
+def oracle_tokens(cfg, opts, params, req, k=0):
+    """Single-device greedy reference against trial k's weights."""
+    p1 = jax.tree.map(lambda x: x[k], params)
+    vpad = p1["embed"]["tok"].shape[0]
+    if vpad != cfg.vocab_size:
+        p1["embed"]["tok"] = p1["embed"]["tok"][:cfg.vocab_size]
+        if "head" in p1:
+            p1["head"] = p1["head"][:, :cfg.vocab_size]
+    n_stack = jax.tree.leaves(p1["layers"])[0].shape[0]
+    cache = lm.init_cache(cfg, 1, MAX_SEQ, cache_dtype=jnp.float32,
+                          n_layers=n_stack)
+    logits, cache, _ = lm.forward(cfg, opts, p1,
+                                  {"tokens": jnp.asarray(req.prompt[None])},
+                                  mode="prefill", cache=cache)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    for t in range(req.max_new_tokens - 1):
+        logits, cache, _ = lm.forward(
+            cfg, opts, p1, {"tokens": jnp.asarray([[toks[-1]]], jnp.int32)},
+            mode="decode", cache=cache,
+            kv_offset=jnp.asarray([req.prompt_len + t], jnp.int32))
+        toks.append(int(jnp.argmax(logits[0, 0])))
+    return toks
+
+
+def shared_prefix_trace(vocab, seed=0, n_arches=1):
+    """A warm-up request per arch followed by sharers whose prompts reuse a
+    10-token prefix (2 full blocks + a partial tail at block_size 4, so the
+    hits exercise both full-block reuse and the CoW fork) and one cold
+    request; sharers arrive after the warm-up has surely completed."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, vocab, (10,)).astype(np.int32)
+    reqs = []
+    rid = 0
+    for arch in range(n_arches):
+        for sl, arrival, gen in ((2, 0.0, 4), (2, 40.0, 4), (4, 41.0, 3),
+                                 (6, 42.0, 4)):
+            sfx = rng.integers(0, vocab, (sl,)).astype(np.int32)
+            reqs.append(Request(rid, np.concatenate([shared, sfx]), gen,
+                                arrival=arrival, arch=arch))
+            rid += 1
+        reqs.append(Request(rid, rng.integers(0, vocab, (9,)).astype(np.int32),
+                            3, arrival=43.0, arch=arch))
+        rid += 1
+    return reqs
+
+
+def _clone(reqs):
+    return [r.clone() for r in reqs]
+
+
+def test_engine_prefix_cache_matches_nocache_and_oracle():
+    """The acceptance bar: greedy tokens are bit-identical with the prefix
+    cache on vs off (and vs the single-device oracle), including under CoW
+    forks of a shared tail block."""
+    cfg, opts, mesh, eng, params = build()
+    reqs = shared_prefix_trace(cfg.vocab_size)
+    e_off = ServeEngine(cfg, eng, mesh, params, opts)
+    c_off = e_off.run(_clone(reqs))
+    e_on = ServeEngine(cfg, eng, mesh, params, opts, prefix_cache=True)
+    c_on = e_on.run(_clone(reqs))
+    for r, a, b in zip(reqs, c_off, c_on):
+        assert a.tokens == b.tokens, f"request {r.rid}: cache-on != cache-off"
+        assert b.tokens == oracle_tokens(cfg, opts, params, r), \
+            f"request {r.rid}: prefix-cached engine diverged from the oracle"
+    # the cache actually worked: hits landed, a shared tail was CoW-forked,
+    # and whole prefill waves were skipped
+    s = e_on.stats
+    assert s.prefix_hits >= 3 and s.prefix_hit_tokens >= 30
+    assert s.cow_forks >= 1
+    assert s.prefill_calls < e_off.stats.prefill_calls
+    # completed prompts stay cached (tree references), not freed
+    assert e_on.prefix_cache.cached_blocks() > 0
+    assert e_on.allocator.used_blocks() == e_on.prefix_cache.cached_blocks()
+
+
+def test_engine_eviction_under_pressure_no_deadlock():
+    """Fill the pool with cached prefixes, then admit fresh requests: LRU
+    leaves must be reclaimed on demand with no deadlock and every request
+    served (the cache can never wedge admission)."""
+    cfg, opts, mesh, eng, params = build(n_blocks=8)  # 8 x 4 = 32 cache rows
+    rng = np.random.default_rng(3)
+    reqs = []
+    # phase 1: four distinct prompts whose cached blocks fill most of the
+    # pool after completion (each caches 2 full blocks)
+    for i in range(4):
+        reqs.append(Request(i, rng.integers(0, cfg.vocab_size,
+                                            (9,)).astype(np.int32),
+                            2, arrival=float(10 * i)))
+    # phase 2: fresh prompts needing allocation -> evictions
+    for i in range(4, 8):
+        reqs.append(Request(i, rng.integers(0, cfg.vocab_size,
+                                            (9,)).astype(np.int32),
+                            2, arrival=float(60 + 10 * (i - 4))))
+    e = ServeEngine(cfg, eng, mesh, params, opts, prefix_cache=True)
+    comps = e.run(_clone(reqs), max_ticks=2000)
+    assert [c.rid for c in comps] == list(range(8))
+    for r, c in zip(reqs, comps):
+        assert c.tokens == oracle_tokens(cfg, opts, params, r), \
+            f"request {r.rid} diverged under eviction pressure"
+    assert e.stats.prefix_evictions > 0
+    # invariant: everything still live is exactly the tree's holdings
+    assert e.allocator.used_blocks() == e.prefix_cache.cached_blocks()
+
+
+@pytest.mark.slow
+def test_engine_multiarch_sharded_prefix_parity():
+    """K=2 gang x data_size=2 (four pool partitions, per-partition radix
+    trees): prefix hits and CoW forks must preserve bit-exactness against
+    the cache-off gang."""
+    cfg, opts, mesh, eng, params = build(data_size=2, slots=1, microbatch=1,
+                                         n_trials=2)
+    reqs = shared_prefix_trace(cfg.vocab_size, seed=5, n_arches=2)
+    e_off = ServeEngine(cfg, eng, mesh, params, opts)
+    c_off = e_off.run(_clone(reqs))
+    e_on = ServeEngine(cfg, eng, mesh, params, opts, prefix_cache=True)
+    c_on = e_on.run(_clone(reqs))
+    for a, b in zip(c_off, c_on):
+        assert a.tokens == b.tokens, \
+            f"request {a.rid} (arch {a.arch}): cache-on != cache-off"
+    assert e_on.allocator.n_partitions == 4
+    assert e_on.stats.prefix_hits >= 2
+
+
+def test_engine_rejects_prefix_cache_without_paging():
+    cfg, opts, mesh, eng, params = build()
+    dense = dataclasses.replace(eng, paged=False, n_blocks=0)
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, dense, mesh, params, opts, prefix_cache=True)

@@ -13,6 +13,7 @@ from repro.core.partitioner import partition_costs
 from repro.core.pipeline import EngineConfig
 from repro.models import layers as L
 from repro.models import lm
+from repro.serve.paging import BlockAllocator
 
 
 @settings(max_examples=30, deadline=None)
@@ -104,6 +105,70 @@ def test_moe_capacity_monotonicity(seed, top_k):
     assert jnp.all(jnp.isfinite(lo)) and jnp.all(jnp.isfinite(hi))
     # dropped-token rows fall back to zero update; norm(lo) <= norm(hi)+tol
     assert float(jnp.linalg.norm(lo)) <= float(jnp.linalg.norm(hi)) + 1e-3
+
+
+@settings(max_examples=40, deadline=None)
+@given(n_blocks=st.integers(1, 12),
+       ops=st.lists(st.tuples(
+           st.sampled_from(["alloc", "incref", "decref", "fork"]),
+           st.integers(0, 10)), max_size=60))
+def test_block_allocator_refcount_invariants(n_blocks, ops):
+    """The paged-serving allocator under interleaved alloc / incref / decref
+    / CoW-fork sequences (the prefix-sharing lifecycle): no double-free, no
+    handout of a live block, and pool conservation (used + free == pool) at
+    every step — checked against an independent refcount model."""
+    a = BlockAllocator(n_blocks=n_blocks, block_size=4)
+    model = {}  # id -> refcount (the oracle)
+
+    def pick(i):
+        live = sorted(model)
+        return live[i % len(live)] if live else None
+
+    for op, arg in ops:
+        if op == "alloc":
+            n = arg % (n_blocks + 1)
+            got = a.alloc(n)
+            if len(model) + n > n_blocks:
+                assert got is None  # all-or-nothing on exhaustion
+            else:
+                assert got is not None and len(got) == n
+                for b in got:
+                    assert b not in model  # never hand out a live block
+                    model[b] = 1
+        elif op == "incref" and model:
+            b = pick(arg)
+            a.incref([b])
+            model[b] += 1
+        elif op == "decref" and model:
+            b = pick(arg)
+            freed = a.decref([b])
+            model[b] -= 1
+            if model[b] == 0:
+                assert freed == [b]
+                del model[b]
+            else:
+                assert freed == []
+        elif op == "fork" and model:  # CoW: private copy, drop shared ref
+            got = a.alloc(1)
+            if len(model) >= n_blocks:
+                assert got is None
+            else:
+                assert got is not None and got[0] not in model
+                model[got[0]] = 1
+                b = pick(arg)
+                a.decref([b])
+                model[b] -= 1
+                if model[b] == 0:
+                    del model[b]
+        # pool conservation + model agreement, every step
+        assert a.used_blocks() == len(model)
+        assert a.free_blocks() == n_blocks - len(model)
+        for b, r in model.items():
+            assert a.ref_count(b) == r
+    # draining every reference returns the whole pool to the free list
+    for b, r in sorted(model.items()):
+        a.decref([b] * r)
+    assert a.all_free() and a.free_blocks() == n_blocks
 
 
 @settings(max_examples=10, deadline=None)
