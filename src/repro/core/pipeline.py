@@ -26,6 +26,7 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
@@ -75,6 +76,9 @@ class EngineConfig:
     # leading K axis — each co-served variant owns its own pool); rows sharded
     # over the data/pod axes each own an equal pool slice (n_blocks /
     # dp_degree blocks per shard per trial)
+    host_blocks: int = 0  # host-memory spill tier PER POOL PARTITION (serve
+    # BlockStore): evicted prefix-cache blocks and retracted requests' KV
+    # swap out here instead of being destroyed; 0 = no host tier
     # --- §Perf knobs (baseline: all off/default) ---------------------------
     skip_bubbles: bool = False  # cond-skip fill/drain ticks (compute+gathers;
     # safe: validity is uniform over every axis the inner collectives span)
@@ -1017,19 +1021,44 @@ def make_slot_reset(cfg: ArchConfig, eng: EngineConfig, mesh,
     return jax.jit(mapped, donate_argnums=(0,))
 
 
-def make_block_copy(cfg: ArchConfig, eng: EngineConfig, mesh,
-                    jit: bool = True) -> Callable:
-    """Builds fn(cache, src, dst) copying pool blocks dst := src per layer.
+@dataclasses.dataclass
+class TransferKernels:
+    """The three block-movement primitives consumed by
+    ``serve.transfer.TransferEngine`` (the sole caller — block movement has
+    no one-shot public API; every copy/swap is enqueued on the transfer
+    engine and batched per engine round)."""
 
-    The copy-on-write half of prefix sharing (serve/prefix_cache.py): before
-    a row may write into a partially-matched *shared* block (refcount > 1),
-    the engine forks it — allocates a private block and calls this to copy
-    the shared block's K/V rows into it, so no shared block is ever mutated.
+    copy: Callable  # (cache, src, dst) -> cache; compiled pool copy
+    extract: Callable  # (cache, k, shard, local_ids) -> [payload, ...]
+    inject: Callable  # (cache, k, shard, local_ids, payloads) -> cache
 
-    ``src``/``dst``: (K, dp, n_copies) int32 *local* physical ids per
-    (trial, data-shard) pool partition, -1 = no-op padding. Copies apply to
-    every layer of the pool at once (a block id addresses the same slot of
-    each layer's pool leaf).
+
+def make_transfer_kernels(cfg: ArchConfig, eng: EngineConfig, mesh,
+                          jit: bool = True) -> TransferKernels:
+    """Builds the device kernels behind the serve transfer engine.
+
+    **copy(cache, src, dst)** — batched device pool copy dst := src per
+    layer, the copy-on-write half of prefix sharing: before a row may write
+    into a partially-matched *shared* block (refcount > 1), the engine forks
+    it — allocates a private block and copies the shared block's K/V rows
+    into it, so no shared block is ever mutated. ``src``/``dst`` are
+    (K, dp, n_copies) int32 *local* physical ids per (trial, data-shard)
+    pool partition, -1 = no-op padding; a block id addresses the same slot
+    of every layer's pool leaf, so one call moves all layers.
+
+    **extract(cache, k, shard, local_ids)** — device → host: read trial k /
+    shard's pool blocks out to one host payload per id (a (2, Lp,
+    block_size, h_kv, hd) array stacking K and V). Read-only — extracting a
+    shared block is always safe — and eager: spill/retract callers free the
+    device block immediately after.
+
+    **inject(cache, k, shard, local_ids, payloads)** — host → device: write
+    extracted payloads back into (freshly allocated) pool blocks. Inverse
+    of extract; round-trips bit-exactly.
+
+    Extraction/injection address the *global* pool leaf (the n_blocks axis
+    concatenates the dp shards), so local ids are offset by the shard's
+    slice before indexing.
     """
     _check_paged_support(cfg, eng)
     cspecs = serve_cache_pspecs(cfg, eng)
@@ -1052,9 +1081,32 @@ def make_block_copy(cfg: ArchConfig, eng: EngineConfig, mesh,
 
     mapped = shard_map(inner, mesh=mesh, in_specs=(cspecs, ispec, ispec),
                        out_specs=cspecs, check_vma=False)
-    if not jit:
-        return mapped
-    return jax.jit(mapped, donate_argnums=(0,))
+    copy_fn = jax.jit(mapped, donate_argnums=(0,)) if jit else mapped
+
+    dp = 1 if eng.batch_replicated else eng.data_size * eng.pod_size
+    per_shard = max(eng.n_blocks // dp, 1)
+
+    def _gids(shard, local_ids):
+        return np.asarray([shard * per_shard + i for i in local_ids],
+                          np.int32)
+
+    def extract(cache, k, shard, local_ids):
+        gids = _gids(shard, local_ids)
+        # advanced indices (k, gids) split by the layer slice: result is
+        # (n, Lp, block_size, h_kv, hd)
+        kv = np.asarray(cache["layers"]["k"][k, :, gids])
+        vv = np.asarray(cache["layers"]["v"][k, :, gids])
+        return [np.stack([kv[j], vv[j]]) for j in range(len(local_ids))]
+
+    def inject(cache, k, shard, local_ids, payloads):
+        gids = _gids(shard, local_ids)
+        pk = jnp.asarray(np.stack([p[0] for p in payloads]))
+        pv = jnp.asarray(np.stack([p[1] for p in payloads]))
+        lk = cache["layers"]["k"].at[k, :, gids].set(pk)
+        lv = cache["layers"]["v"].at[k, :, gids].set(pv)
+        return {"layers": {"k": lk, "v": lv}, "shared": None}
+
+    return TransferKernels(copy=copy_fn, extract=extract, inject=inject)
 
 
 def batch_pspecs(cfg: ArchConfig, eng: EngineConfig, train: bool):

@@ -145,6 +145,8 @@ def plan_serve_capacity(cfg: ArchConfig, base_eng: EngineConfig,
                         budget_fraction: float = HBM_BUDGET_FRACTION,
                         mix: Optional[Sequence[tuple]] = None,
                         hit_rate: float = 0.0,
+                        overcommit: float = 1.0,
+                        host_blocks: int = 0,
                         ) -> EngineConfig:
     """Choose the serving slot grid for one model — or a co-serving gang.
 
@@ -185,9 +187,29 @@ def plan_serve_capacity(cfg: ArchConfig, base_eng: EngineConfig,
     traffic's measured prefix redundancy; the runtime batcher still commits
     exact per-request (non-cached) needs, so an optimistic hit_rate degrades
     to deferred admission, never to preemption.
+
+    ``overcommit`` (paged only) widens the planned grid past the pool's
+    expected-demand capacity by the same factor the runtime batcher admits
+    past it: above 1.0 the engine trades occasional retraction (preemptive
+    swap-out/recompute of the youngest request) for higher steady-state
+    occupancy on bursty traces. ``host_blocks`` sizes the per-partition
+    host spill tier carried into the returned config — it extends prefix
+    retention and absorbs retraction payloads (cheap host DRAM), but backs
+    no compute, so it never widens the grid itself.
     """
     if not 0.0 <= hit_rate < 1.0:
         raise ValueError(f"hit_rate must be in [0, 1), got {hit_rate}")
+    if overcommit < 1.0:
+        raise ValueError(f"planning overcommit must be >= 1.0 (the batcher "
+                         f"accepts < 1.0 as a runtime safety margin, but a "
+                         f"grid planned below capacity is dead weight), "
+                         f"got {overcommit}")
+    if host_blocks < 0:
+        raise ValueError(f"host_blocks must be >= 0, got {host_blocks}")
+    if (overcommit > 1.0 or host_blocks > 0) and not paged:
+        raise ValueError("overcommit > 1.0 and host_blocks require "
+                         "paged=True (dense strips cannot be retracted or "
+                         "spilled)")
     budget = (HBM_BYTES_PER_CHIP if hbm_bytes is None
               else hbm_bytes) * budget_fraction
     if mix is not None:
@@ -236,14 +258,17 @@ def plan_serve_capacity(cfg: ArchConfig, base_eng: EngineConfig,
         # partition, so only (1 - hit_rate) of each row's tokens demand
         # fresh blocks
         mean_demand = max(sum(demands) / k_trials * (1.0 - hit_rate), 1.0)
-        m_cap = int(local_blocks * block_size
+        # overcommit admits past the pool by the same factor at runtime
+        # (retraction absorbs the tail), so the planned grid widens with it
+        m_cap = int(local_blocks * block_size * overcommit
                     // (mean_demand * eng.microbatch))
         m = min(max_slots, max(1, m_cap))
         # blocks beyond the capped grid's worst case are dead weight (every
         # cell fully backed at max_seq) — return them to the budget
         local_blocks = min(local_blocks, max(eng.microbatch * m, 1) * per_row)
         return dataclasses.replace(eng, n_microbatches=m,
-                                   n_blocks=local_blocks * dp)
+                                   n_blocks=local_blocks * dp,
+                                   host_blocks=host_blocks)
     m = min(max(m_bubble, base_eng.n_microbatches, 1), max_slots)
     eng = dataclasses.replace(base_eng, n_trials=k_trials, n_microbatches=m,
                               max_seq=max_seq)

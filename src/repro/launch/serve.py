@@ -26,6 +26,11 @@ comparison.
     ... python -m repro.launch.serve --arch chatglm3-6b --smoke \
         --paged --prefix-cache --expected-hit-rate 0.5 --n-requests 16
 
+    # overcommit past the pool (preemptive retraction) with a host spill
+    # tier absorbing retract payloads and evicted prefix blocks
+    ... python -m repro.launch.serve --arch chatglm3-6b --smoke \
+        --paged --prefix-cache --overcommit 1.5 --host-blocks 32
+
     # sliding-window serving (attention archs; window < prompt+gen)
     ... python -m repro.launch.serve --arch chatglm3-6b --smoke \
         --window 8 --n-requests 12
@@ -109,7 +114,19 @@ def build_args():
                     "planning (0 = max_seq/2)")
     ap.add_argument("--overcommit", type=float, default=1.0,
                     help="paged admission headroom: commit up to this "
-                    "fraction of each pool partition (1.0 = preemption-free)")
+                    "fraction of each pool partition (1.0 = preemption-free; "
+                    "> 1.0 enables retraction — on pool exhaustion the "
+                    "youngest running request is preempted, swapped to the "
+                    "host tier or replayed, and restored later)")
+    ap.add_argument("--host-blocks", type=int, default=0,
+                    help="host-memory spill tier capacity per pool partition "
+                    "(--paged): evicted prefix-cache blocks spill to host "
+                    "instead of being destroyed, and retraction swaps KV out "
+                    "instead of recomputing (0 = no host tier)")
+    ap.add_argument("--no-spill", action="store_true",
+                    help="keep the host tier for retraction payloads only: "
+                    "prefix-cache eviction destroys blocks instead of "
+                    "spilling them")
     ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
                     default=False,
                     help="radix prefix cache over the paged block pool: "
@@ -139,6 +156,16 @@ def main():
                          "drop --paged")
     if args.prefix_cache and not args.paged:
         raise SystemExit("--prefix-cache shares paged KV blocks; add --paged")
+    if args.overcommit > 1.0 and not args.paged:
+        raise SystemExit(
+            f"--overcommit {args.overcommit} > 1.0 admits past the block "
+            f"pool and relies on retracting paged block commitments; dense "
+            f"cache strips cannot be retracted — add --paged")
+    if args.host_blocks < 0:
+        raise SystemExit(f"--host-blocks must be >= 0, got {args.host_blocks}")
+    if (args.host_blocks > 0 or args.no_spill) and not args.paged:
+        raise SystemExit("--host-blocks/--no-spill manage the paged block "
+                         "store's host tier; add --paged")
     if args.static and args.arches > 1:
         raise SystemExit("--static is single-arch lockstep batching; "
                          "multi-arch routing needs the continuous engine")
@@ -164,15 +191,21 @@ def main():
         planned = sched.plan_serve_capacity(
             cfg, base, max_seq, paged=args.paged, expected_seq=exp,
             block_size=args.block_size, max_slots=args.max_slots, mix=mix,
-            hit_rate=args.expected_hit_rate if args.paged else 0.0)
+            hit_rate=args.expected_hit_rate if args.paged else 0.0,
+            overcommit=args.overcommit if args.paged else 1.0,
+            host_blocks=args.host_blocks)
         slots = min(planned.n_microbatches, args.max_slots)
         print(f"capacity plan: {planned.n_trials} trial row(s) x "
               f"{planned.n_microbatches} slots fit the HBM budget; "
               f"using {slots} slots/trial"
               + (f" (pool: {planned.n_blocks} x {planned.block_size}-token "
-                 f"blocks per trial)" if args.paged else ""))
+                 f"blocks per trial"
+                 + (f" + {planned.host_blocks} host blocks/partition"
+                    if planned.host_blocks else "")
+                 + ")" if args.paged else ""))
         base = dataclasses.replace(base, n_microbatches=slots,
-                                   n_blocks=planned.n_blocks)
+                                   n_blocks=planned.n_blocks,
+                                   host_blocks=planned.host_blocks)
     elif args.paged:
         n_blocks = args.n_blocks
         if n_blocks <= 0:
@@ -181,7 +214,8 @@ def main():
             dp = args.n_data
             per_row = blocks_for(max_seq, args.block_size)
             n_blocks = args.microbatch * args.slots * per_row * dp
-        base = dataclasses.replace(base, n_blocks=n_blocks)
+        base = dataclasses.replace(base, n_blocks=n_blocks,
+                                   host_blocks=args.host_blocks)
     eng = base
 
     if args.trace:
@@ -233,7 +267,8 @@ def main():
     else:
         engine = ServeEngine(cfg, eng, mesh, params, opts,
                              overcommit=args.overcommit, policy=args.policy,
-                             prefix_cache=args.prefix_cache)
+                             prefix_cache=args.prefix_cache,
+                             spill=not args.no_spill)
         completions = engine.run(requests)
         stats = engine.stats
         mode = "continuous/paged" if args.paged else "continuous"
@@ -266,10 +301,18 @@ def main():
         print(f"block pool: {eng.n_blocks} x {eng.block_size}-token blocks "
               f"per trial, peak in use {s.get('peak_blocks_in_use', 0)}, "
               f"pool stalls {s.get('pool_stalls', 0)}")
+        if args.overcommit > 1.0 or eng.host_blocks > 0:
+            print(f"tiered store: {s.get('retractions', 0)} retractions, "
+                  f"{s.get('restored', 0)} restored, "
+                  f"{s.get('swap_out_blocks', 0)} blocks swapped out, "
+                  f"{s.get('swap_in_blocks', 0)} swapped in "
+                  f"(host tier {eng.host_blocks} blocks/partition)")
     if args.prefix_cache:
         print(f"prefix cache: {s.get('prefix_hits', 0)} hits "
-              f"({s.get('prefix_hit_tokens', 0)} tokens), "
+              f"({s.get('prefix_hit_tokens', 0)} tokens, "
+              f"{s.get('host_hit_tokens', 0)} via host restores), "
               f"{s.get('prefix_inserts', 0)} blocks cached, "
+              f"{s.get('prefix_spills', 0)} spilled to host, "
               f"{s.get('prefix_evictions', 0)} evicted, "
               f"{s.get('cow_forks', 0)} CoW forks")
 

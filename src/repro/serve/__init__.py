@@ -7,7 +7,12 @@ from repro.serve.request import (  # noqa: F401
     poisson_trace,
     save_trace,
 )
-from repro.serve.batcher import POLICIES, Batcher, Slot  # noqa: F401
+from repro.serve.batcher import (  # noqa: F401
+    POLICIES,
+    Batcher,
+    ResumeState,
+    Slot,
+)
 from repro.serve.engine import ServeEngine, ServeStats, static_serve  # noqa: F401
 from repro.serve.paging import (  # noqa: F401
     BlockAllocator,
@@ -15,3 +20,5 @@ from repro.serve.paging import (  # noqa: F401
     blocks_for,
 )
 from repro.serve.prefix_cache import PrefixCache, PrefixHit  # noqa: F401
+from repro.serve.store import BlockStore, HostBlock  # noqa: F401
+from repro.serve.transfer import TransferEngine, make_null_transfer  # noqa: F401

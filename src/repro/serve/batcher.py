@@ -28,7 +28,18 @@ commits only the *non-cached* block need: the slot is seeded with the shared
 prefix blocks, ``Slot.pos`` starts at the hit boundary, and the committed
 total counts each referenced cached block once across the partition's live
 slots (shared residency is charged exactly once; unreferenced cached blocks
-are evictable and never charged).
+are evictable and never charged). Host-resident (spilled) matched nodes are
+charged one fresh block each — their restore allocates from the pool.
+
+Retraction (overcommit > 1): the engine may :meth:`Batcher.requeue` a
+running request it preempted under pool exhaustion, together with a
+:class:`ResumeState` continuation. The request re-enters the *head* of its
+arch's queue (it was admitted once — oldest priority, and victim selection
+is youngest-first, so a restored request is not immediately re-victimized)
+and admission places it down one of two bit-identical paths: swap-restore
+(``host_ids`` set — fresh device blocks + async swap-in of the extracted
+payloads, straight back to decode) or recompute-restore (replay
+prompt ++ generated tokens as a teacher-forced prefill).
 """
 from __future__ import annotations
 
@@ -61,6 +72,10 @@ class Slot:
     cached_ids: set = dataclasses.field(default_factory=set)  # prefix-hit
     # blocks this slot references (shared; charged once per partition)
     hit_tokens: int = 0  # prefix-cache hit length (prefill starts here)
+    resumed: bool = False  # restored from a retraction (stats count once)
+    resume_tokens: Optional[list] = None  # recompute-restore: the tokens
+    # generated before retraction; the teacher-forced replay re-derives them
+    # (asserted bit-identical) instead of re-sampling
 
     @property
     def free(self) -> bool:
@@ -92,6 +107,25 @@ class Slot:
         self.block_commit = 0
         self.cached_ids = set()
         self.hit_tokens = 0
+        self.resumed = False
+        self.resume_tokens = None
+
+
+@dataclasses.dataclass
+class ResumeState:
+    """Continuation of a retracted (preempted) request, held while it waits
+    in the queue for re-admission. ``host_ids`` set = swap-restore (the
+    victim's table payloads sit pinned in the host tier of ``partition``);
+    None = recompute-restore (replay prompt ++ generated[:-1] as a
+    teacher-forced prefill — the replay's final head output must re-derive
+    ``generated[-1]``)."""
+
+    generated: list  # tokens emitted before retraction (>= 1)
+    pos: int  # cache depth at retraction (prompt_len + len(generated) - 1)
+    admitted_tick: int  # original admission (victim ordering + queue stats)
+    first_token_tick: int  # original TTFT tick (latency stats stay honest)
+    partition: int = -1  # host-tier partition holding the swapped payloads
+    host_ids: Optional[list] = None  # pinned host blocks, table order
 
 
 class Batcher:
@@ -123,7 +157,8 @@ class Batcher:
                  n_trials: int = 1,
                  allocator: Optional[BlockAllocator] = None,
                  rows_per_partition: int = 0, overcommit: float = 1.0,
-                 policy: str = "fcfs", prefix_cache=None):
+                 policy: str = "fcfs", prefix_cache=None, store=None,
+                 transfer=None):
         if policy not in POLICIES:
             raise ValueError(f"unknown admission policy {policy!r} "
                              f"(choose from {POLICIES})")
@@ -131,6 +166,13 @@ class Batcher:
             raise ValueError("prefix_cache requires a paged BlockAllocator")
         self.n_trials = n_trials
         self.prefix_cache = prefix_cache
+        # the tiered store routes allocation-pressure reclamation; a cache
+        # always carries one (legacy wiring), otherwise it may be passed
+        self.store = store if store is not None else (
+            prefix_cache.store if prefix_cache is not None else None)
+        self.transfer = transfer  # TransferEngine (swap-restore admission)
+        self.resume: dict = {}  # rid -> ResumeState for retracted requests
+        self.restored = 0  # retracted requests brought back into a slot
         self.n_microbatches = n_microbatches
         self.mb_global = mb_global
         self.prefill_chunks = max(1, prefill_chunks)
@@ -208,6 +250,16 @@ class Batcher:
                     f"{self.overcommit}) — it could never be admitted")
         self.queues[req.arch].append(req)
 
+    def requeue(self, req: Request,
+                state: Optional["ResumeState"] = None) -> None:
+        """Put a retracted request back at the *head* of its arch's queue —
+        it was admitted once, so it outranks everything still waiting — with
+        its continuation (None = retracted mid-prefill, plain re-admission
+        from scratch)."""
+        self.queues[req.arch].insert(0, req)
+        if state is not None:
+            self.resume[req.rid] = state
+
     # -- admission -----------------------------------------------------------
 
     def split_chunks(self, prompt: np.ndarray, full_len: int = 0) -> list:
@@ -266,27 +318,57 @@ class Batcher:
                 req = self._head(k, now)
                 if req is None:
                     break
+                state = self.resume.get(req.rid)
+                if state is not None and state.host_ids is not None:
+                    # swap-restore: fresh blocks + async swap-in, no prefill
+                    slot = self._place_restore(req, state, free)
+                    if slot is None:
+                        break
+                    free.remove(slot)
+                    self.queues[k].remove(req)
+                    del self.resume[req.rid]
+                    self.restored += 1
+                    admitted.append(slot)
+                    continue
+                # recompute-restore rides the normal placement with the
+                # teacher-forced replay prompt (prefix hits may re-seed it)
+                replay = None
+                if state is not None:
+                    replay = np.concatenate(
+                        [req.prompt, np.asarray(state.generated[:-1],
+                                                req.prompt.dtype)])
                 if self.allocator is None:
                     slot = free.pop(0)
                 else:
-                    slot = self._place_paged(req, free)
+                    slot = self._place_paged(req, free, prompt=replay)
                     if slot is None:  # per-arch pool backpressure: defer
                         break
                     free.remove(slot)
                 self.queues[k].remove(req)
                 slot.request = req
                 slot.pos = slot.hit_tokens
-                slot.chunks = self.split_chunks(req.prompt[slot.pos:],
-                                                full_len=req.prompt_len)
+                src = req.prompt if replay is None else replay
+                slot.chunks = self.split_chunks(src[slot.pos:],
+                                                full_len=int(src.shape[0]))
                 slot.generated = []
                 slot.admitted_tick = int(now)
+                if state is not None:
+                    del self.resume[req.rid]
+                    self.restored += 1
+                    slot.resumed = True
+                    slot.resume_tokens = list(state.generated)
+                    slot.admitted_tick = state.admitted_tick
+                    slot.first_token_tick = state.first_token_tick
                 admitted.append(slot)
         return admitted
 
-    def _place_paged(self, req: Request, free: list) -> Optional[Slot]:
+    def _place_paged(self, req: Request, free: list,
+                     prompt=None) -> Optional[Slot]:
         """Pick and prepare a paged slot for ``req``: match the prefix cache
         per candidate partition, charge the non-cached commitment, seed the
-        table. None = no partition fits (defer this arch)."""
+        table. ``prompt`` overrides the matched/prefilled token stream (the
+        recompute-restore replay). None = no partition fits (defer)."""
+        prompt = req.prompt if prompt is None else prompt
         bs = self.allocator.block_size
         total_need = blocks_for(req.total_len, bs)
         limit = int(self.allocator.blocks_per_partition * self.overcommit)
@@ -297,7 +379,7 @@ class Batcher:
         for p in parts:
             committed[p] = self.committed_blocks(p)
             if self.prefix_cache is not None:
-                hits[p] = self.prefix_cache.match(p, req.prompt)
+                hits[p] = self.prefix_cache.match(p, prompt)
                 pinned[p] = self._referenced_cached(p)
 
         def hit_len(p):
@@ -305,17 +387,19 @@ class Batcher:
 
         def fits(p):
             # commitment = new blocks + cached blocks this request would pin
-            # that no live slot pins yet (pinned blocks charge once);
-            # committed_blocks() already balances by *committed* blocks, not
-            # the allocator's free count — commitments from requests admitted
-            # earlier this round have not allocated yet but already claim
-            # their pool
+            # that no live slot pins yet (pinned blocks charge once) + one
+            # fresh block per host-resident matched node (its restore
+            # allocates from the pool); committed_blocks() already balances
+            # by *committed* blocks, not the allocator's free count —
+            # commitments from requests admitted earlier this round have not
+            # allocated yet but already claim their pool
             commit = total_need
             fresh_refs = 0
             if p in hits:
                 commit -= hits[p].n_full_blocks
-                fresh_refs = sum(1 for b in hits[p].block_ids
-                                 if b not in pinned[p])
+                fresh_refs = (sum(1 for b in hits[p].device_ids
+                                  if b not in pinned[p])
+                              + hits[p].n_host_blocks)
             return committed[p] + commit + fresh_refs <= limit
 
         # longest hit first (prefix reuse beats perfect balance), then the
@@ -328,18 +412,61 @@ class Batcher:
         if slot is None:
             return None
         p = self.partition_of(slot.k, slot.b)
-        slot.table = BlockTable(self.allocator, p, cache=self.prefix_cache)
+        slot.table = BlockTable(self.allocator, p, store=self.store)
         slot.block_commit = total_need
         slot.cached_ids = set()
         slot.hit_tokens = 0
         if p in hits and hits[p].hit_tokens > 0:
-            hit = hits[p]
-            self.prefix_cache.acquire(hit)
-            slot.table.seed(hit.block_ids)
-            slot.block_commit = total_need - hit.n_full_blocks
-            slot.cached_ids = set(hit.block_ids)
-            slot.hit_tokens = hit.hit_tokens
+            # acquire restores host-resident matched nodes (async swap-in)
+            # and returns the *effective* hit — possibly truncated when the
+            # pool cannot back a restore under overcommit races
+            hit = self.prefix_cache.acquire(hits[p])
+            if hit.hit_tokens > 0:
+                slot.table.seed(hit.block_ids)
+                slot.block_commit = total_need - hit.n_full_blocks
+                slot.cached_ids = set(hit.block_ids)
+                slot.hit_tokens = hit.hit_tokens
         return slot
+
+    def _place_restore(self, req: Request, state: ResumeState,
+                       free: list) -> Optional[Slot]:
+        """Swap-restore placement: allocate fresh device blocks for the
+        retracted request's extracted payloads and enqueue their swap-in —
+        the slot resumes *decoding* at its retracted position once the
+        round's transfer flush lands the bytes (no prefill replay).
+        None = no partition can back it yet (defer; the pinned host blocks
+        wait)."""
+        bs = self.allocator.block_size
+        total_need = blocks_for(req.total_len, bs)
+        limit = int(self.allocator.blocks_per_partition * self.overcommit)
+        parts = {self.partition_of(c.k, c.b) for c in free}
+        committed = {p: self.committed_blocks(p) for p in parts}
+        ordered = sorted(free, key=lambda s: (
+            committed[self.partition_of(s.k, s.b)], s.m, s.b))
+        n = len(state.host_ids)
+        for cand in ordered:
+            p = self.partition_of(cand.k, cand.b)
+            if committed[p] + total_need > limit:
+                continue
+            table = BlockTable(self.allocator, p, store=self.store)
+            if not table.ensure(n * bs):  # physical pressure: next partition
+                continue
+            for dst, hid in zip(table.blocks, state.host_ids):
+                self.transfer.swap_in(
+                    p, dst, self.store.host_pop(state.partition, hid))
+            cand.table = table
+            cand.request = req
+            cand.pos = state.pos
+            cand.chunks = []
+            cand.generated = list(state.generated)
+            cand.admitted_tick = state.admitted_tick
+            cand.first_token_tick = state.first_token_tick
+            cand.block_commit = total_need
+            cand.cached_ids = set()
+            cand.hit_tokens = 0
+            cand.resumed = True
+            return cand
+        return None
 
     # -- wave planning -------------------------------------------------------
 

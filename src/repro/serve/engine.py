@@ -52,10 +52,17 @@ tree (``serve/prefix_cache.py``) instead of dropping them, admission matches
 each prompt against the tree and seeds the slot from the cached block table
 at ``pos`` = hit length (chunked prefill starts at the hit boundary — whole
 prefill waves are skipped, so TTFT drops with hit length), and a write into
-a partially-matched shared tail block first forks it copy-on-write via a
-device pool copy (``make_block_copy``) — greedy tokens stay bit-identical
-with the cache on or off. Unreferenced cached blocks are reclaimed LRU when
-the pool runs dry, so the cache never deadlocks admission.
+a partially-matched shared tail block first forks it copy-on-write via the
+transfer engine (``serve/transfer.py`` — CoW copies, device→host spills and
+host→device restores all batch into one flush per round) — greedy tokens
+stay bit-identical with the cache on or off. Under pool pressure,
+unreferenced cached leaves are spilled to the :class:`BlockStore` host tier
+(still matchable; admission hits trigger an async swap-in) or destroyed LRU
+when no host room remains, so the cache never deadlocks admission. Past
+``overcommit`` 1.0 the engine *retracts* the youngest-admitted running
+request on exhaustion — its generated tokens are swapped to host (or
+replayed teacher-forced) and the request re-enters its queue head —
+instead of relying on the stall-retry guard.
 
 * **Admission / chunked prefill.** A prompt is split into
   ``EngineConfig.prefill_chunks`` near-equal chunks; each engine round
@@ -95,10 +102,12 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import pipeline as pl
 from repro.models.layers import ModelOptions
-from repro.serve.batcher import Batcher
+from repro.serve.batcher import Batcher, ResumeState
 from repro.serve.paging import BlockAllocator, blocks_for
 from repro.serve.prefix_cache import PrefixCache
 from repro.serve.request import Completion, Request
+from repro.serve.store import BlockStore
+from repro.serve.transfer import TransferEngine
 
 
 def _pctl(samples, q) -> float:
@@ -124,8 +133,14 @@ class ServeStats:
     prefix_hits: int = 0  # admitted requests with a non-empty prefix hit
     prefix_hit_tokens: int = 0  # prompt tokens served from cached blocks
     prefix_inserts: int = 0  # blocks adopted into the radix tree
-    prefix_evictions: int = 0  # cached blocks reclaimed under pool pressure
+    prefix_evictions: int = 0  # cached nodes destroyed (gone from BOTH tiers)
+    prefix_spills: int = 0  # cached nodes spilled device -> host (matchable)
+    host_hit_tokens: int = 0  # prefix-hit tokens served via host restores
     cow_forks: int = 0  # shared tail blocks forked copy-on-write
+    retractions: int = 0  # running requests preempted under overcommit > 1
+    restored: int = 0  # retracted requests re-admitted (swap or recompute)
+    swap_out_blocks: int = 0  # block payloads extracted device -> host
+    swap_in_blocks: int = 0  # block payloads restored host -> device
     occupancy_samples: list = dataclasses.field(default_factory=list)
     decode_busy_samples: list = dataclasses.field(default_factory=list)
     block_usage_samples: list = dataclasses.field(default_factory=list)
@@ -182,11 +197,17 @@ class ServeStats:
         if self.block_usage_samples:
             out["peak_blocks_in_use"] = int(max(self.block_usage_samples))
             out["pool_stalls"] = self.pool_stalls
+            out["retractions"] = self.retractions
+            out["restored"] = self.restored
+            out["swap_out_blocks"] = self.swap_out_blocks
+            out["swap_in_blocks"] = self.swap_in_blocks
         if self.prefix_enabled:
             out["prefix_hits"] = self.prefix_hits
             out["prefix_hit_tokens"] = self.prefix_hit_tokens
+            out["host_hit_tokens"] = self.host_hit_tokens
             out["prefix_inserts"] = self.prefix_inserts
             out["prefix_evictions"] = self.prefix_evictions
+            out["prefix_spills"] = self.prefix_spills
             out["cow_forks"] = self.cow_forks
         return out
 
@@ -207,7 +228,8 @@ class ServeEngine:
     def __init__(self, cfg: ArchConfig, eng: pl.EngineConfig, mesh, params,
                  opts: Optional[ModelOptions] = None,
                  overcommit: float = 1.0, policy: str = "fcfs",
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 host_blocks: Optional[int] = None, spill: bool = True):
         if cfg.rope == "mrope" or cfg.frontend is not None:
             raise ValueError("continuous batching supports text-only archs; "
                              "use the static path for mrope/frontend models")
@@ -233,9 +255,15 @@ class ServeEngine:
             cfg, self.opts, self.eng, mesh, "append", with_active=True)
         self.paged = bool(self.eng.paged)
         self.allocator = None
+        self.store = None
+        self.transfer = None
         if prefix_cache and not self.paged:
             raise ValueError("the radix prefix cache shares paged KV blocks; "
                              "enable eng.paged to use prefix_cache")
+        if overcommit > 1.0 and not self.paged:
+            raise ValueError("overcommit > 1.0 preempts paged block "
+                             "commitments; dense strips cannot be retracted "
+                             "— enable eng.paged")
         if self.paged:
             # one pool partition per (trial, data/pod shard): each variant's
             # pool leaf slice is its own, and rows allocate only from the
@@ -250,13 +278,20 @@ class ServeEngine:
             # no slot reset: paged serving is attention-only (no recurrent
             # state) and stale pool blocks are masked via kv_len
             self.reset_fn = None
+            # every block movement — CoW copies, swap-out, swap-in — flows
+            # through the transfer engine, batched into one flush per round
+            self.transfer = TransferEngine(
+                self.n_arches, n_parts,
+                kernels=pl.make_transfer_kernels(cfg, self.eng, mesh))
+            self.transfer.bind(lambda: self.cache, self._set_cache)
+            hb = self.eng.host_blocks if host_blocks is None else host_blocks
+            self.store = BlockStore(self.allocator, host_blocks=hb,
+                                    spill=spill, transfer=self.transfer)
         else:
             self.reset_fn = pl.make_slot_reset(cfg, self.eng, mesh)
         self.prefix_cache = None
-        self.copy_fn = None
         if prefix_cache:
-            self.prefix_cache = PrefixCache(self.allocator)
-            self.copy_fn = pl.make_block_copy(cfg, self.eng, mesh)
+            self.prefix_cache = PrefixCache(self.store)
         self.cache = pl.serve_cache_struct(cfg, self.eng, dry_run=False)
         self.batcher = Batcher(self.eng.n_microbatches, self.mb_global,
                                self.n_chunks, self.eng.max_seq,
@@ -264,11 +299,17 @@ class ServeEngine:
                                allocator=self.allocator,
                                rows_per_partition=self.eng.microbatch,
                                overcommit=overcommit, policy=policy,
-                               prefix_cache=self.prefix_cache)
+                               prefix_cache=self.prefix_cache,
+                               store=self.store, transfer=self.transfer)
+        # preemption replaces the stall-retry deadlock guard past 1.0
+        self.retractable = self.paged and overcommit > 1.0
         self.tick = 0
         self._stalled_ticks = 0
         self.stats = ServeStats(prefix_enabled=prefix_cache)
         self.completions: list = []
+
+    def _set_cache(self, cache) -> None:
+        self.cache = cache
 
     # -- public API ----------------------------------------------------------
 
@@ -305,7 +346,7 @@ class ServeEngine:
             if not self.paged:
                 self._reset_rows(admitted)
             self.stats.prompt_tokens += sum(
-                s.request.prompt_len for s in admitted)
+                s.request.prompt_len for s in admitted if not s.resumed)
         occupied = self.batcher.occupied()
         self.stats.peak_live = max(self.stats.peak_live, occupied)
         self.stats.occupancy_samples.append(occupied / self.batcher.n_cells)
@@ -317,25 +358,36 @@ class ServeEngine:
         dec = self.batcher.decode_slots()
         if dec:
             self._decode_call(dec)
-        # overcommitted pools can stall every live row at a block boundary at
-        # once; there is no preemption, so flag the deadlock instead of
-        # spinning to max_ticks
+        # belt-and-braces: nothing stays in flight across rounds (admission
+        # swap-ins with no same-round compute call, e.g.)
+        if self.transfer is not None and self.transfer.pending():
+            self.transfer.flush()
+        # a pool can still wedge (e.g. overcommit 1.0 with every live row at
+        # a block boundary, or retraction finding only in-flight victims);
+        # flag the deadlock instead of spinning to max_ticks
         if occupied and self.stats.calls == calls_before and not admitted:
             self._stalled_ticks += 1
             if self._stalled_ticks > 100:
                 raise RuntimeError(
                     "engine stalled: block pool exhausted with every live "
-                    "row waiting for a block (overcommit too aggressive — "
-                    "lower it toward 1.0 or grow n_blocks)")
+                    "row waiting for a block (raise overcommit above 1.0 to "
+                    "enable retraction, grow n_blocks, or grow host_blocks)")
         else:
             self._stalled_ticks = 0
+        if self.transfer is not None:
+            self.stats.cow_forks = self.transfer.cow_copies
+            self.stats.swap_out_blocks = self.transfer.swap_out_blocks
+            self.stats.swap_in_blocks = self.transfer.swap_in_blocks
+            self.stats.restored = self.batcher.restored
         if self.prefix_cache is not None:
             # synced at end of round so this tick's completions (inserts)
             # and allocation-pressure evictions are already counted
             self.stats.prefix_hits = self.prefix_cache.hits
             self.stats.prefix_hit_tokens = self.prefix_cache.hit_tokens
+            self.stats.host_hit_tokens = self.prefix_cache.host_hit_tokens
             self.stats.prefix_inserts = self.prefix_cache.inserts
             self.stats.prefix_evictions = self.prefix_cache.evictions
+            self.stats.prefix_spills = self.prefix_cache.spills
         return True
 
     # -- internals -----------------------------------------------------------
@@ -362,65 +414,149 @@ class ServeEngine:
             bt[s.k, s.m, s.b] = s.table.as_row(self.max_blocks)
         return bt
 
-    def _ensure_blocks(self, slots, extra) -> list:
-        """Alloc-on-append: grow each slot's table to cover its next write.
-        Rows the pool cannot back right now are stalled (kept out of this
-        call, retried next round after completions free blocks)."""
+    def _prepare(self, slots, extra) -> list:
+        """Make each slot writable for its next ``extra`` positions: grow its
+        block table (retracting a victim under overcommit if the pool is
+        dry), then enqueue CoW forks for shared write-range blocks. Rows the
+        pool still cannot back are stalled (kept out of this round's call,
+        retried next round)."""
         if not self.paged:
             return list(slots)
-        ready = [s for s in slots if s.table.ensure(s.pos + extra)]
-        self.stats.pool_stalls += len(slots) - len(ready)
+        ready = []
+        for s in slots:
+            if s.request is None:
+                continue  # retracted earlier this round by another row
+            if self._ensure(s, extra):
+                ready.append(s)
+            elif s.request is not None:
+                self.stats.pool_stalls += 1
+        # a later row's retraction may have victimized an already-ready one
+        ready = [s for s in ready if s.request is not None]
         return self._cow_forks(ready, extra)
+
+    def _ensure(self, slot, extra) -> bool:
+        if slot.table.ensure(slot.pos + extra):
+            return True
+        if not self.retractable:
+            return False
+        return self._retract_for(slot, extra)
+
+    def _retract_for(self, slot, extra) -> bool:
+        """Free pool room for ``slot`` by preempting the lowest-priority
+        running request in its partition (youngest admission tick, ties by
+        rid — SGLang-style). The requester itself is fair game: if it IS the
+        youngest, it gets retracted and the round moves on. Victims with
+        in-flight transfer blocks are skipped (their bytes are not yet
+        addressable)."""
+        p = self.batcher.partition_of(slot.k, slot.b)
+        while True:
+            cands = [s for s in self.batcher.slots
+                     if s.request is not None
+                     and self.batcher.partition_of(s.k, s.b) == p
+                     and not any(self.transfer.in_flight(p, b)
+                                 for b in s.table.blocks)]
+            if not cands:
+                return False
+            victim = max(cands,
+                         key=lambda s: (s.admitted_tick, s.request.rid))
+            self._retract(victim)
+            if victim is slot:
+                return False
+            if slot.table.ensure(slot.pos + extra):
+                return True
+
+    def _retract(self, victim) -> None:
+        """Preempt a running request: swap its blocks to host when the tier
+        has room (decode-phase rows only — their whole KV is generated
+        state), else remember its tokens for a teacher-forced recompute
+        replay; release the cell and requeue the request at its queue head
+        with its original admission tick (so restore order is stable and a
+        freshly restored row is not the next victim)."""
+        req = victim.request
+        p = self.batcher.partition_of(victim.k, victim.b)
+        gen = (list(victim.generated) if victim.generated
+               else (list(victim.resume_tokens)
+                     if victim.resume_tokens else []))
+        state = None
+        if gen and not victim.chunks:
+            state = self._swap_out_victim(victim, p, gen)
+        if state is None and gen:
+            state = ResumeState(generated=gen, pos=victim.pos,
+                                admitted_tick=victim.admitted_tick,
+                                first_token_tick=victim.first_token_tick)
+        victim.release()
+        self.batcher.requeue(req, state)
+        self.stats.retractions += 1
+
+    def _swap_out_victim(self, victim, p, gen):
+        """Extract the victim's whole block table to pinned host blocks.
+        Returns a swap ResumeState, or None when the host tier cannot take
+        the full table (partial swaps are useless — fall back to replay)."""
+        st = self.store
+        ids = list(victim.table.blocks)
+        if not (st.spill and st.host_capacity >= len(ids)):
+            return None
+        payloads = self.transfer.swap_out(p, ids)
+        hids = []
+        for payload in payloads:
+            hid = st.host_put(p, payload, pinned=True)
+            if hid is None:  # tier full of pinned/interior blocks: roll back
+                for h in hids:
+                    st.host_pop(p, h)
+                self.transfer.swap_out_blocks -= len(payloads)
+                return None
+            hids.append(hid)
+        return ResumeState(generated=gen, pos=victim.pos,
+                           admitted_tick=victim.admitted_tick,
+                           first_token_tick=victim.first_token_tick,
+                           partition=p, host_ids=hids)
 
     def _cow_forks(self, slots, extra) -> list:
         """Enforce the writer-exclusivity invariant: any *shared* block
         (refcount > 1) overlapping a row's next write range [pos, pos+extra)
-        is forked — a private block is allocated, the shared block's K/V is
-        device-copied into it, and the table entry swaps — before the write
-        is issued. Only the partially-matched tail block of a prefix hit can
-        ever be shared in a write range, so forks are rare and batched into
-        one pool-copy call per engine round."""
+        is forked — a private block is allocated, a pool copy is enqueued on
+        the transfer engine (flushed once per round), and the table entry
+        swaps — before the write is issued. Only the partially-matched tail
+        block of a prefix hit can ever be shared in a write range, so forks
+        are rare."""
         if self.prefix_cache is None:
             return list(slots)
-        ready, copies = [], []
+        ready = []
         for s in slots:
             pairs = s.table.fork_shared(s.pos, s.pos + extra)
             if pairs is None:  # pool can't back the fork: stall this row
                 self.stats.pool_stalls += 1
                 continue
+            p = self.batcher.partition_of(s.k, s.b)
             for src, dst in pairs:
                 s.cached_ids.discard(src)  # no longer pinned by this slot
-                copies.append((s.k, s.b, src, dst))
+                self.transfer.copy(p, src, dst)
             ready.append(s)
-        if copies:
-            self._flush_copies(copies)
-            self.stats.cow_forks += len(copies)
         return ready
 
-    def _flush_copies(self, copies) -> None:
-        """Issue the batched device pool copies for this round's CoW forks.
-        src/dst are (K, dp, C) local ids per (trial, shard) partition, -1
-        padded; C is bucketed to powers of two to bound compile shapes."""
-        n_sh = self.batcher.n_shards
-        per: dict = {}
-        for k, b, src, dst in copies:
-            shard = self.batcher.partition_of(k, b) - k * n_sh
-            per.setdefault((k, shard), []).append((src, dst))
-        c = 1
-        while c < max(len(v) for v in per.values()):
-            c *= 2
-        src = np.full((self.n_arches, n_sh, c), -1, np.int32)
-        dst = np.full((self.n_arches, n_sh, c), -1, np.int32)
-        for (k, sh), pairs in per.items():
-            for j, (s_, d_) in enumerate(pairs):
-                src[k, sh, j], dst[k, sh, j] = s_, d_
-        self.cache = self.copy_fn(self.cache, jnp.asarray(src),
-                                  jnp.asarray(dst))
+    def _assert_clean(self, slots, extra) -> None:
+        """Compute-call precondition: no participating block is mid-transfer,
+        and every block in a row's write range is exclusively owned."""
+        bs = self.eng.block_size
+        for s in slots:
+            p = self.batcher.partition_of(s.k, s.b)
+            assert not any(self.transfer.in_flight(p, b)
+                           for b in s.table.blocks), \
+                "pipeline call would read an in-flight block"
+            for j in range(s.pos // bs, blocks_for(s.pos + extra, bs)):
+                assert self.allocator.ref_count(s.table.blocks[j], p) == 1, \
+                    "write range overlaps a shared (refcount > 1) block"
 
     def _prefill_call(self, qlen: int, slots) -> None:
-        slots = self._ensure_blocks(slots, qlen)
+        slots = self._prepare(slots, qlen)
+        if self.transfer is not None:
+            # batched flush: this call's CoW forks plus any admission-time
+            # swap-ins land in ONE transfer round before the compute reads
+            self.transfer.flush()
         if not slots:
             return
+        if self.paged:
+            self._assert_clean(slots, qlen)
         tokens, positions, active = self._grid(qlen)
         for s in slots:
             tokens[s.k, s.m, s.b] = s.chunks[0]
@@ -439,19 +575,33 @@ class ServeEngine:
         for s in slots:
             s.chunks.pop(0)
             s.pos += qlen
-            if not s.chunks:  # final chunk → first generated token
-                s.generated.append(int(tok[s.k, s.m, s.b]))
-                s.first_token_tick = self.tick
-                self.stats.tokens_generated += 1
+            if not s.chunks:
+                t = int(tok[s.k, s.m, s.b])
+                if s.resume_tokens is not None:
+                    # recompute-restore replay: the final chunk re-derives
+                    # the victim's LAST pre-retraction token — it must match
+                    # bit-for-bit and is not re-counted (already generated)
+                    assert t == s.resume_tokens[-1], \
+                        "recompute replay diverged from retracted tokens"
+                    s.generated = list(s.resume_tokens)
+                    s.resume_tokens = None
+                else:  # final chunk → first generated token
+                    s.generated.append(t)
+                    s.first_token_tick = self.tick
+                    self.stats.tokens_generated += 1
                 self._maybe_finish(s)
 
     def _decode_call(self, slots) -> None:
-        slots = self._ensure_blocks(slots, 1)
+        slots = self._prepare(slots, 1)
+        if self.transfer is not None:
+            self.transfer.flush()
         if not slots:
             # a fully pool-stalled decode round is zero decode work, not a
             # skipped sample — keep the occupancy metric honest
             self.stats.decode_busy_samples.append(0.0)
             return
+        if self.paged:
+            self._assert_clean(slots, 1)
         tokens, positions, active = self._grid(1)
         for s in slots:
             tokens[s.k, s.m, s.b, 0] = s.generated[-1]

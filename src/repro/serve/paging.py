@@ -22,9 +22,44 @@ to the request's ``max_new_tokens`` budget, so the final footprint is known
 at enqueue time): the batcher commits ``blocks_for(total_len)`` per live
 request and defers admission when the committed total would exceed the
 partition's pool — the backpressure that replaces worst-case ``max_seq``
-reservation. ``overcommit`` > 1 relaxes the committed-total gate (statistical
-packing); the allocator then backstops with per-append failures that stall a
-row until a completion frees blocks.
+reservation. ``overcommit`` > 1 relaxes the committed-total gate
+(statistical packing); the engine then backstops per-append failures by
+*retracting* the lowest-priority running request instead of stalling (see
+the retract/restore state machine below).
+
+Two-tier lifecycle (device ⊂ store; see serve/store.py, serve/transfer.py)
+--------------------------------------------------------------------------
+The device pool is the fast tier of a :class:`~repro.serve.store.BlockStore`
+that also owns a host-memory tier of spilled payloads. Device blocks are a
+*cache* over the store, not a hard capacity wall:
+
+* a block is **device-resident** while its id is live in the allocator; it
+  becomes **host-resident** when the transfer engine extracts its K/V to a
+  host block and the device id is freed (prefix-cache spills, retraction
+  swap-outs), and device-resident again when a restore allocates a fresh id
+  and enqueues a swap-in;
+* every pressure-driven reclamation flows through ``BlockStore.reclaim`` —
+  ``BlockTable`` never talks to the prefix cache directly — so eviction
+  ordering is one LRU walk across both tiers instead of per-call-site.
+
+**Transfer-in-flight rule**: between enqueue and the transfer engine's
+per-round ``flush()``, every copy/swap-in *destination* block holds stale
+pool bytes. No compute call may read it, nothing may mutate or extract it,
+and a slot whose table contains one is not a valid retraction victim. The
+serve engine asserts this before every pipeline call.
+
+**Retract/restore state machine** (overcommit > 1 only):
+
+  RUNNING ──pool exhausted, youngest-first──► RETRACTED ──re-admitted──►
+  RESTORING ──transfer flush──► RUNNING
+
+  A retracted decode-phase request either *swap-restores* (its table's
+  payloads were extracted to pinned host blocks at retraction; restore
+  allocates fresh device blocks and swap-ins them — no recompute) or
+  *recompute-restores* (host tier full/disabled: replay prompt + generated
+  tokens as a teacher-forced prefill; the replay's final head output must
+  equal the last generated token). Both paths yield tokens bit-identical to
+  an un-preempted run. A retracted prefill-phase request simply requeues.
 
 Refcount / copy-on-write invariants (prefix sharing, see prefix_cache.py)
 -------------------------------------------------------------------------
@@ -41,8 +76,8 @@ requests). The invariants every caller must preserve:
   3. **Writers own their blocks exclusively**: no K/V write may target a
      block whose refcount is > 1. Shared blocks are read-only; a request
      about to write into a shared block must first *fork* it
-     (:meth:`BlockTable.fork_shared`) — allocate a fresh block, have the
-     engine issue a device-side pool copy, and drop its reference to the
+     (:meth:`BlockTable.fork_shared`) — allocate a fresh block, enqueue a
+     device pool copy on the transfer engine, and drop its reference to the
      shared original (copy-on-write). The device scatter itself never
      touches positions below a row's ``kv_offset``, so full shared prefix
      blocks are structurally write-free; only the partially-filled *tail*
@@ -50,11 +85,13 @@ requests). The invariants every caller must preserve:
   4. Shared reads are safe without copies: the gather path
      (``blocks.paged_kv_update``) reads whole blocks through each row's
      table and masks the garbage tail via ``kv_len``, so two tables holding
-     the same block id read the same bytes.
-  5. The radix prefix cache holds exactly one reference per cached block;
-     eviction (its LRU walk) may therefore reclaim only blocks at
-     refcount 1 — a cached block also referenced by a live request is
-     pinned until that request completes.
+     the same block id read the same bytes. Device → host extraction is a
+     read too: swapping out a shared block never violates invariant 3.
+  5. The radix prefix cache holds exactly one reference per cached
+     device-resident block; reclamation (the store's LRU walk) may
+     therefore spill or destroy only blocks at refcount 1 — a cached block
+     also referenced by a live request is pinned until that request
+     completes. Host-resident cache nodes hold no device reference at all.
 """
 from __future__ import annotations
 
@@ -177,15 +214,19 @@ class BlockTable:
     With a prefix cache, the leading entries may be *shared* blocks seeded
     from a radix hit (:meth:`seed`); the caller must already hold a
     reference on them (``PrefixCache.acquire``), which :meth:`close`
-    releases uniformly. ``cache`` is the optional prefix cache consulted to
-    evict unreferenced cached blocks when the free list runs dry.
+    releases uniformly. Allocation pressure is routed through the tiered
+    ``store`` (``BlockStore.reclaim`` — the single LRU walk across the
+    device and host tiers); passing a bare ``cache`` (the pre-store API,
+    kept for host-side tests) routes through that cache's own store.
     """
 
     def __init__(self, allocator: BlockAllocator, partition: int = 0,
-                 cache=None):
+                 cache=None, store=None):
         self.allocator = allocator
         self.partition = partition
-        self.cache = cache  # Optional[PrefixCache] — eviction on pressure
+        if store is None and cache is not None:
+            store = cache.store  # legacy wiring: the cache carries its store
+        self.store = store  # Optional[BlockStore] — reclamation on pressure
         self.blocks: List[int] = []
         self._closed = False
 
@@ -206,9 +247,10 @@ class BlockTable:
 
     def _alloc(self, need: int) -> Optional[List[int]]:
         got = self.allocator.alloc(need, self.partition)
-        if got is None and self.cache is not None:
-            # reclaim LRU unreferenced cached prefixes, then retry once
-            self.cache.make_room(self.partition, need)
+        if got is None and self.store is not None:
+            # reclaim through the tiered store (spill/evict LRU unreferenced
+            # cached prefixes across both tiers), then retry once
+            self.store.reclaim(self.partition, need)
             got = self.allocator.alloc(need, self.partition)
         return got
 

@@ -13,7 +13,10 @@ from repro.core.partitioner import partition_costs
 from repro.core.pipeline import EngineConfig
 from repro.models import layers as L
 from repro.models import lm
-from repro.serve.paging import BlockAllocator
+from repro.serve.paging import BlockAllocator, blocks_for
+from repro.serve.prefix_cache import PrefixCache
+from repro.serve.store import BlockStore
+from repro.serve.transfer import make_null_transfer
 
 
 @settings(max_examples=30, deadline=None)
@@ -169,6 +172,71 @@ def test_block_allocator_refcount_invariants(n_blocks, ops):
     for b, r in sorted(model.items()):
         a.decref([b] * r)
     assert a.all_free() and a.free_blocks() == n_blocks
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_blocks=st.integers(2, 8), host_blocks=st.integers(0, 5),
+       ops=st.lists(st.tuples(
+           st.sampled_from(["insert", "hit", "pressure"]),
+           st.integers(0, 10 ** 6)), max_size=40))
+def test_tiered_store_lifecycle_invariants(n_blocks, host_blocks, ops):
+    """The tiered BlockStore + radix cache + transfer engine under
+    interleaved insert / hit-acquire / allocation-pressure sequences (the
+    spill/restore lifecycle): pool conservation at every step, every
+    device-resident tree node keeps its tree reference, the host tier never
+    exceeds capacity, spilled nodes stay addressable (no lost blocks), and
+    no transfer is left in flight once flushed."""
+    bs = 2
+    a = BlockAllocator(n_blocks=n_blocks, block_size=bs)
+    store = BlockStore(a, host_blocks=host_blocks,
+                       transfer=make_null_transfer())
+    pc = PrefixCache(store)
+    prompts = []  # inserted token streams (hit ops replay them)
+
+    def release(ids):
+        for b in ids:
+            a.decref([b])
+
+    for op, arg in ops:
+        rng = np.random.default_rng(arg)
+        if op == "insert":
+            plen = bs * int(rng.integers(1, n_blocks + 1)) + 1
+            blocks = store.alloc(blocks_for(plen, bs))
+            if blocks is not None:
+                prompt = rng.integers(0, 50, (plen,)).astype(np.int32)
+                pc.insert(0, prompt, blocks)
+                prompts.append(prompt)
+                release(blocks)  # the request's table closes
+        elif op == "hit" and prompts:
+            prompt = prompts[arg % len(prompts)]
+            eff = pc.acquire(pc.match(0, prompt))
+            assert all(b >= 0 for b in eff.block_ids)  # acquire => device
+            store.transfer.flush()
+            release(eff.block_ids)  # the admitted request completes
+        elif op == "pressure":
+            got = store.alloc(1 + arg % n_blocks)
+            if got is not None:
+                release(got)
+        # invariants, every step
+        assert a.used_blocks() + a.free_blocks() == n_blocks
+        assert store.host_used(0) <= host_blocks
+        assert store.transfer.pending() == 0 or op == "hit"
+        device_nodes = [n for n in pc._walk(0) if n.block >= 0]
+        host_nodes = [n for n in pc._walk(0) if n.block < 0]
+        for n in device_nodes:
+            assert a.ref_count(n.block) >= 1  # tree reference never lost
+        for n in host_nodes:
+            hb = store.host_get(0, n.host)  # host id stays addressable
+            assert hb.owner is n and not hb.pinned
+        assert len(host_nodes) == store.host_used(0)
+    store.transfer.flush()
+    assert store.transfer.pending() == 0 and not store.transfer._in_flight
+    # with every request reference released, only the tree holds the pool:
+    # each device-resident node exactly once
+    device_nodes = [n for n in pc._walk(0) if n.block >= 0]
+    assert a.used_blocks() == len(device_nodes)
+    for n in device_nodes:
+        assert a.ref_count(n.block) == 1
 
 
 @settings(max_examples=10, deadline=None)

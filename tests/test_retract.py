@@ -1,0 +1,202 @@
+"""Preemptive retraction under overcommit > 1.0 and the host-offloaded
+prefix cache: on a bursty trace the engine must retract running requests
+instead of deadlocking, restore them through either path (host swap-in or
+teacher-forced recompute), and keep every request's greedy tokens
+bit-identical to the preemption-free schedule.
+
+(Multi-device setup comes from tests/conftest.py — pytest-only module.)"""
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.configs import ASSIGNED_ARCHS  # noqa: E402
+from repro.core import pipeline as pl  # noqa: E402
+from repro.core.partitioner import plan_stages  # noqa: E402
+from repro.launch.mesh import make_test_mesh  # noqa: E402
+from repro.models.layers import ModelOptions  # noqa: E402
+from repro.serve import Request, ServeEngine  # noqa: E402
+
+MAX_SEQ = 24
+
+
+def build(arch="chatglm3-6b", n_stages=2, data_size=1, slots=2, microbatch=2,
+          prefill_chunks=2, n_trials=1):
+    cfg = ASSIGNED_ARCHS[arch].reduced()
+    opts = ModelOptions()
+    mesh = make_test_mesh(data_size, n_stages)
+    eng = pl.EngineConfig(n_trials=n_trials, n_microbatches=slots,
+                          microbatch=microbatch, n_stages=n_stages,
+                          data_size=data_size, max_seq=MAX_SEQ,
+                          cache_dtype=jnp.float32,
+                          prefill_chunks=prefill_chunks)
+    plan = plan_stages(cfg, eng.n_stages)
+    params = pl.init_trial_params(cfg, eng, plan, jax.random.PRNGKey(0),
+                                  max_pos=MAX_SEQ)
+    return cfg, opts, mesh, eng, params
+
+
+def bursty_trace(vocab, seed=7, n=6):
+    """Everything arrives at t=0 — the workload that exhausts a small pool
+    at once and forces the overcommitted engine to preempt."""
+    rng = np.random.default_rng(seed)
+    shapes = [(12, 5), (11, 6), (9, 4), (12, 6), (10, 5), (11, 4),
+              (9, 6), (12, 4)][:n]
+    return [Request(i, rng.integers(0, vocab, (p,)).astype(np.int32), g,
+                    arrival=0.0)
+            for i, (p, g) in enumerate(shapes)]
+
+
+def _clone(reqs):
+    return [r.clone() for r in reqs]
+
+
+def _tokens(comps):
+    return {c.rid: c.tokens for c in comps}
+
+
+def _run_paged(cfg, eng, mesh, params, opts, reqs, overcommit,
+               host_blocks, **kw):
+    paged = dataclasses.replace(eng, paged=True, block_size=4, n_blocks=6)
+    engine = ServeEngine(cfg, paged, mesh, params, opts,
+                         overcommit=overcommit, host_blocks=host_blocks,
+                         **kw)
+    comps = engine.run(_clone(reqs), max_ticks=2000)
+    return engine, comps
+
+
+def test_overcommit_retraction_swap_restore_bit_identical():
+    """overcommit 1.5 on a 6-block pool with a host tier: the engine must
+    retract at least one running request, swap its KV out, restore it by
+    swap-in, and finish every request with tokens identical to the
+    preemption-free (overcommit 1.0) schedule — no deadlock, no leaks."""
+    cfg, opts, mesh, eng, params = build()
+    reqs = bursty_trace(cfg.vocab_size)
+    base_engine, base = _run_paged(cfg, eng, mesh, params, opts, reqs,
+                                   overcommit=1.0, host_blocks=0)
+    oc_engine, oc = _run_paged(cfg, eng, mesh, params, opts, reqs,
+                               overcommit=1.5, host_blocks=16)
+    assert sorted(_tokens(oc)) == sorted(_tokens(base))  # nothing lost
+    for rid, toks in _tokens(base).items():
+        assert _tokens(oc)[rid] == toks, \
+            f"request {rid}: overcommit 1.5 diverged from 1.0"
+    s = oc_engine.stats
+    assert s.retractions > 0, "pool never pressured — the test is vacuous"
+    assert s.restored > 0 and s.restored <= s.retractions
+    # the host tier was actually used for at least one restore
+    assert s.swap_out_blocks > 0 and s.swap_in_blocks > 0
+    assert base_engine.stats.retractions == 0  # 1.0 stays preemption-free
+    assert oc_engine.allocator.all_free()
+    assert oc_engine.store.host_used() == 0  # pinned payloads all consumed
+    assert oc_engine.transfer.pending() == 0
+
+
+def test_overcommit_retraction_recompute_restore_bit_identical():
+    """No host tier: retraction must fall back to the teacher-forced replay
+    (the final replay chunk re-derives the victim's last token — asserted
+    bit-identical inside the engine) and still match the preemption-free
+    schedule."""
+    cfg, opts, mesh, eng, params = build()
+    reqs = bursty_trace(cfg.vocab_size)
+    _, base = _run_paged(cfg, eng, mesh, params, opts, reqs,
+                         overcommit=1.0, host_blocks=0)
+    engine, oc = _run_paged(cfg, eng, mesh, params, opts, reqs,
+                            overcommit=1.5, host_blocks=0)
+    for rid, toks in _tokens(base).items():
+        assert _tokens(oc)[rid] == toks, \
+            f"request {rid}: recompute-restore diverged"
+    s = engine.stats
+    assert s.retractions > 0 and s.restored > 0
+    assert s.swap_in_blocks == 0  # no host tier => no swaps, only replay
+    assert engine.allocator.all_free()
+
+
+def test_overcommit_requires_paged():
+    cfg, opts, mesh, eng, params = build()
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(cfg, eng, mesh, params, opts, overcommit=1.5)
+
+
+def test_host_prefix_spill_exact_and_matchable():
+    """Prefix cache over the tiered store: under pool pressure cached nodes
+    spill to host instead of being destroyed, stay matchable, and a later
+    request's hit restores them via swap-in — tokens stay bit-identical to
+    the cache-off engine throughout."""
+    cfg, opts, mesh, eng, params = build()
+    rng = np.random.default_rng(3)
+    base_prompt = rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+    reqs = []
+    for i in range(6):
+        # shared 8-token prefix, 4-token distinct suffix; staggered arrivals
+        # so the tree is pressured between hits (suffixes repeat: request 3+
+        # can hit nodes that were spilled in the meantime)
+        suffix = rng.integers(0, cfg.vocab_size, (4,)).astype(np.int32) \
+            if i < 3 else reqs[i - 3].prompt[8:]
+        reqs.append(Request(i, np.concatenate([base_prompt, suffix]),
+                            4 + i % 3, arrival=2.0 * i))
+    _, plain = _run_paged(cfg, eng, mesh, params, opts, reqs,
+                          overcommit=1.0, host_blocks=0)
+    engine, cached = _run_paged(cfg, eng, mesh, params, opts, reqs,
+                                overcommit=1.0, host_blocks=16,
+                                prefix_cache=True)
+    for rid, toks in _tokens(plain).items():
+        assert _tokens(cached)[rid] == toks, \
+            f"request {rid}: host-offloaded prefix cache changed tokens"
+    s = engine.stats
+    assert s.prefix_hits > 0 and s.prefix_hit_tokens > 0
+    assert s.prefix_spills > 0, "pool pressure never spilled — resize"
+    assert s.host_hit_tokens > 0, "no hit ever restored a spilled node"
+    assert s.swap_in_blocks > 0
+    # every device block still in use is a cached tree node (no slot leaks),
+    # and every host block still resident is a spilled tree node
+    assert engine.allocator.used_blocks() == \
+        engine.prefix_cache.cached_blocks()
+    assert engine.store.host_used() == \
+        engine.prefix_cache.host_cached_blocks()
+
+
+def test_no_spill_destroys_instead():
+    """spill=False keeps the old destroy-on-evict semantics even with a
+    host tier configured."""
+    cfg, opts, mesh, eng, params = build()
+    rng = np.random.default_rng(3)
+    base_prompt = rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+    reqs = [Request(i, np.concatenate(
+                [base_prompt,
+                 rng.integers(0, cfg.vocab_size, (4,)).astype(np.int32)]),
+                    4, arrival=2.0 * i) for i in range(5)]
+    engine, comps = _run_paged(cfg, eng, mesh, params, opts, reqs,
+                               overcommit=1.0, host_blocks=16,
+                               prefix_cache=True, spill=False)
+    assert len(comps) == len(reqs)
+    s = engine.stats
+    assert s.prefix_spills == 0 and s.swap_out_blocks == 0
+    assert engine.prefix_cache.evictions > 0  # pressure fell back to drops
+    assert engine.allocator.used_blocks() == \
+        engine.prefix_cache.cached_blocks()
+
+
+@pytest.mark.slow
+def test_overcommit_bursty_trace_heavy():
+    """The full acceptance scenario at test scale: a larger bursty trace
+    through overcommit 1.5 with prefix cache + host tier, against the
+    preemption-free run — every request completes with identical tokens and
+    both restore paths stay exercised."""
+    cfg, opts, mesh, eng, params = build(slots=3)
+    reqs = bursty_trace(cfg.vocab_size, seed=11, n=8)
+    _, base = _run_paged(cfg, eng, mesh, params, opts, reqs,
+                         overcommit=1.0, host_blocks=0)
+    engine, oc = _run_paged(cfg, eng, mesh, params, opts, reqs,
+                            overcommit=1.5, host_blocks=16,
+                            prefix_cache=True)
+    assert len(oc) == len(reqs)
+    for rid, toks in _tokens(base).items():
+        assert _tokens(oc)[rid] == toks, f"request {rid} diverged"
+    s = engine.stats
+    assert s.retractions > 0 and s.restored > 0
+    assert engine.allocator.used_blocks() == \
+        engine.prefix_cache.cached_blocks()
+    assert engine.store.host_used() == \
+        engine.prefix_cache.host_cached_blocks()
