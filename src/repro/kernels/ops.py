@@ -1,9 +1,11 @@
 """Jitted dispatch wrappers for the Pallas kernels.
 
 Model code calls these (via ``ModelOptions.use_flash_kernel`` /
-``use_mamba_kernel``); on this CPU container they run in interpret mode
-(kernel body executed in Python) — the TPU target compiles the same
-pl.pallas_call. Set ``REPRO_PALLAS_INTERPRET=0`` on real TPU.
+``use_mamba_kernel`` / ``use_paged_kernel``); on this CPU container they run
+in interpret mode (kernel body executed in Python) — the TPU target compiles
+the same pl.pallas_call. Set ``REPRO_PALLAS_INTERPRET=0`` on real TPU.
+``paged_attention`` has its own three-way lowering switch
+(``REPRO_PAGED_ATTN``) — see the paged section below.
 """
 from __future__ import annotations
 
@@ -11,9 +13,11 @@ import functools
 import os
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import flash_attention as fa
 from repro.kernels import mamba_scan as ms
+from repro.kernels import paged_attention as pa
 
 
 def _interpret() -> bool:
@@ -77,6 +81,56 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     if kv_len is not None:
         raise NotImplementedError("ragged kv_len uses the jnp path")
     return _flash_core(q, k, v, causal, window, kv_offset, block_q, block_k)
+
+
+# ---------------------------------------------------------------------------
+# paged attention: forward-only (serving decode/append — no AD path needed)
+# attention straight from the block pool through per-row block tables. Three
+# lowerings, picked by REPRO_PAGED_ATTN or the backend:
+#   "pallas"    — compiled Pallas kernel (blockspec variant), the TPU target.
+#   "interpret" — the Pallas kernel in interpret mode (loop variant); what
+#                 the tier-1 parity tests and forced engine parity runs use.
+#                 Interpret-mode pallas_call copies every input buffer per
+#                 call (O(pool bytes)), so it is for correctness, not speed.
+#   "jnp"       — the kernel's XLA mirror (ref.paged_attention_ref): same
+#                 block-table-native math; with engine-trimmed tables it does
+#                 O(live_blocks) work. The CPU default — this is what makes
+#                 the kernel path outrun the gather path off-TPU.
+# ---------------------------------------------------------------------------
+
+
+def _paged_mode() -> str:
+    env = os.environ.get("REPRO_PAGED_ATTN")
+    if env in ("pallas", "interpret", "jnp"):
+        return env
+    if pa.PrefetchScalarGridSpec is None:  # pragma: no cover - very old jax
+        return "jnp"
+    return "jnp" if jax.default_backend() == "cpu" else "pallas"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def paged_attention(q, k_pool, v_pool, block_tables, kv_offset, kv_len, *,
+                    causal: bool = True, window: int = 0):
+    """q (b, sq, hq, hd); k/v pool (n_blocks, block_size, hkv, hd);
+    block_tables (b, n_tbl) int32 (-1 = unallocated); kv_offset/kv_len (b,)
+    per-row cache depth / live length. Returns (b, sq, hq, hd).
+
+    GQA, per-row ragged offsets, kv_len masking and the sliding window are
+    all handled in-kernel (see kernels/paged_attention.py); the gathered
+    ``max_blocks * block_size`` logical view is never materialized by the
+    pallas lowerings, and the jnp mirror only materializes the (trimmed)
+    table width it is handed.
+    """
+    mode = _paged_mode()
+    if mode == "jnp":
+        from repro.kernels.ref import paged_attention_ref
+        return paged_attention_ref(q, k_pool, v_pool, block_tables,
+                                   kv_offset, kv_len, causal=causal,
+                                   window=window)
+    return pa.paged_attention_pool(
+        q, k_pool, v_pool, block_tables,
+        jnp.asarray(kv_offset, jnp.int32), jnp.asarray(kv_len, jnp.int32),
+        causal=causal, window=window, interpret=(mode == "interpret"))
 
 
 # ---------------------------------------------------------------------------

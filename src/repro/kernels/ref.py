@@ -19,6 +19,27 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, kv_offset=0,
                                ).astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pool, v_pool, block_tables, kv_offset, kv_len,
+                        *, causal=True, window=0):
+    """Gather-then-attend oracle for the paged kernel (fp32 math).
+
+    Materializes each row's full logical K/V view through its block table
+    (the exact path ``blocks.paged_kv_update`` takes) and runs the direct-
+    softmax reference over it — the kernel must match this on live
+    positions while never building the gathered view.
+    """
+    nb, bs = k_pool.shape[0], k_pool.shape[1]
+    b = q.shape[0]
+    span = (jnp.clip(block_tables, 0, nb - 1)[:, :, None] * bs
+            + jnp.arange(bs)[None, None, :]).reshape(b, -1)
+    kf = jnp.take(k_pool.reshape(nb * bs, *k_pool.shape[2:]), span, axis=0)
+    vf = jnp.take(v_pool.reshape(nb * bs, *v_pool.shape[2:]), span, axis=0)
+    return attention_reference(q.astype(jnp.float32), kf.astype(jnp.float32),
+                               vf.astype(jnp.float32), causal=causal,
+                               window=window, kv_offset=kv_offset,
+                               kv_len=kv_len).astype(q.dtype)
+
+
 def mamba_scan_ref(da, dbx, cmat, h0):
     """Sequential oracle: h_t = da_t*h + dbx_t; y_t = Σ_n h_t C_t.
 

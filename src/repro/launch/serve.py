@@ -104,6 +104,16 @@ def build_args():
                        "per-request block tables (admit by expected length)")
     cache.add_argument("--dense", action="store_true",
                        help="dense per-slot cache strips (the default)")
+    attn = ap.add_mutually_exclusive_group()
+    attn.add_argument("--paged-kernel", action="store_true",
+                      help="paged decode/append attends straight from the "
+                      "block pool via the Pallas paged-attention kernel "
+                      "(trimmed block tables, O(live) work; interpret-mode/"
+                      "jnp lowering on CPU — requires --paged)")
+    attn.add_argument("--paged-gather", action="store_true",
+                      help="paged decode/append gathers each row's full "
+                      "max_seq logical K/V view before attending (the "
+                      "default)")
     ap.add_argument("--block-size", type=int, default=16,
                     help="tokens per KV block (--paged)")
     ap.add_argument("--n-blocks", type=int, default=0,
@@ -161,6 +171,9 @@ def main():
             f"--overcommit {args.overcommit} > 1.0 admits past the block "
             f"pool and relies on retracting paged block commitments; dense "
             f"cache strips cannot be retracted — add --paged")
+    if args.paged_kernel and not args.paged:
+        raise SystemExit("--paged-kernel attends through block tables; "
+                         "add --paged")
     if args.host_blocks < 0:
         raise SystemExit(f"--host-blocks must be >= 0, got {args.host_blocks}")
     if (args.host_blocks > 0 or args.no_spill) and not args.paged:
@@ -175,7 +188,7 @@ def main():
     if args.smoke:
         cfg = cfg.reduced()
     max_seq = args.prompt_len + args.gen_len
-    opts = ModelOptions()
+    opts = ModelOptions(use_paged_kernel=args.paged_kernel)
     base = pl.EngineConfig(
         n_trials=args.arches, n_microbatches=max(args.slots, 1),
         microbatch=args.microbatch, n_stages=args.n_model,
@@ -272,6 +285,8 @@ def main():
         completions = engine.run(requests)
         stats = engine.stats
         mode = "continuous/paged" if args.paged else "continuous"
+        if args.paged_kernel:
+            mode += "+kernel"
         if args.prefix_cache:
             mode += "+prefix-cache"
         if args.arches > 1:

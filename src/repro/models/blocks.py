@@ -28,9 +28,8 @@ from repro.models.layers import ModelOptions
 # ---------------------------------------------------------------------------
 
 
-def paged_kv_update(cache, k, v, block_tables, kv_offset, write_mask=None):
-    """Scatter a (b, s) chunk of new K/V into the shared block pool and
-    gather each row's full logical cache view back out through its table.
+def paged_kv_scatter(cache, k, v, block_tables, kv_offset, write_mask=None):
+    """Scatter a (b, s) chunk of new K/V into the shared block pool.
 
     cache {'k','v'}: (n_blocks, block_size, h_kv, hd) — the *pool*, shared by
     every row (no batch axis). block_tables (b, max_blocks) int32 physical ids
@@ -39,9 +38,11 @@ def paged_kv_update(cache, k, v, block_tables, kv_offset, write_mask=None):
     False — idle cells riding along, or pipeline bubble ticks — write nothing
     (their scatter indices are pushed out of bounds and dropped); the
     allocator guarantees live rows' blocks are disjoint, so the scatters
-    never collide. Returns (new_cache, k_rows, v_rows) where k_rows/v_rows
-    are (b, max_blocks*block_size, h_kv, hd) gathered views whose garbage
-    tail (unallocated blocks / stale tokens) the caller masks via kv_len.
+    never collide. Tokens past table capacity (``pos // bs >= max_blocks``)
+    are dropped too — clipping the block index instead would alias them onto
+    the row's *last* allocated block (the clipped entry holds a valid
+    physical id, so the ``phys >= 0`` check alone lets the write land) and
+    silently corrupt cached K/V. Returns the updated pool.
     """
     b, s = k.shape[0], k.shape[1]
     nb, bs = cache["k"].shape[0], cache["k"].shape[1]
@@ -53,7 +54,7 @@ def paged_kv_update(cache, k, v, block_tables, kv_offset, write_mask=None):
     pos = kv_offset[:, None] + jnp.arange(s)[None, :]  # (b, s)
     blk = jnp.clip(pos // bs, 0, max_blocks - 1)
     phys = jnp.take_along_axis(block_tables, blk, axis=1)  # (b, s)
-    ok = phys >= 0
+    ok = (phys >= 0) & (pos // bs < max_blocks)
     if write_mask is not None:
         ok = ok & write_mask[:, None]
     flat = jnp.where(ok, phys * bs + pos % bs, nb * bs)  # OOB -> dropped
@@ -61,13 +62,33 @@ def paged_kv_update(cache, k, v, block_tables, kv_offset, write_mask=None):
         k.reshape(b * s, *k.shape[2:]).astype(pool_k.dtype), mode="drop")
     pool_v = pool_v.at[flat.reshape(-1)].set(
         v.reshape(b * s, *v.shape[2:]).astype(pool_v.dtype), mode="drop")
+    return {"k": pool_k.reshape(cache["k"].shape),
+            "v": pool_v.reshape(cache["v"].shape)}
+
+
+def paged_kv_update(cache, k, v, block_tables, kv_offset, write_mask=None):
+    """Scatter (see :func:`paged_kv_scatter`) and gather each row's full
+    logical cache view back out through its table.
+
+    Returns (new_cache, k_rows, v_rows) where k_rows/v_rows are
+    (b, max_blocks*block_size, h_kv, hd) gathered views whose garbage tail
+    (unallocated blocks / stale tokens) the caller masks via kv_len. This is
+    the *gather path* — O(max_blocks·block_size) materialized per row per
+    call; the paged kernel path (``opts.use_paged_kernel``) scatters only and
+    attends straight from the pool.
+    """
+    b = k.shape[0]
+    nb, bs = cache["k"].shape[0], cache["k"].shape[1]
+    max_blocks = block_tables.shape[1]
+    new_cache = paged_kv_scatter(cache, k, v, block_tables, kv_offset,
+                                 write_mask)
+    pool_k = new_cache["k"].reshape(nb * bs, *cache["k"].shape[2:])
+    pool_v = new_cache["v"].reshape(nb * bs, *cache["v"].shape[2:])
     # gather each row's logical view: position j reads block table[r, j//bs]
     span = (jnp.clip(block_tables, 0, nb - 1)[:, :, None] * bs
             + jnp.arange(bs)[None, None, :]).reshape(b, max_blocks * bs)
     k_rows = jnp.take(pool_k, span, axis=0)
     v_rows = jnp.take(pool_v, span, axis=0)
-    new_cache = {"k": pool_k.reshape(cache["k"].shape),
-                 "v": pool_v.reshape(cache["v"].shape)}
     return new_cache, k_rows, v_rows
 
 
@@ -110,13 +131,24 @@ def attn_apply(cfg: ArchConfig, opts: ModelOptions, p, x, *, pos,
     elif mode == "append" and block_tables is not None:
         # paged chunked prefill: same semantics as the dense append below but
         # K/V live in the shared block pool, reached through per-row tables
-        new_cache, kf, vf = paged_kv_update(cache, k, v, block_tables,
-                                            kv_offset, write_mask)
-        kv_len = jnp.minimum(kv_offset + s, kf.shape[1])
-        out = L.attention(
-            q, kf.astype(q.dtype), vf.astype(q.dtype),
-            causal=True, window=window, kv_offset=kv_offset,
-            kv_len=kv_len, opts=opts)
+        cap = block_tables.shape[1] * cache["k"].shape[1]
+        kv_len = jnp.minimum(kv_offset + s, cap)
+        if opts.use_paged_kernel:
+            # scatter only — the kernel attends straight from the pool
+            # through the tables, never building the gathered view
+            from repro.kernels import ops as kernel_ops
+            new_cache = paged_kv_scatter(cache, k, v, block_tables,
+                                         kv_offset, write_mask)
+            out = kernel_ops.paged_attention(
+                q, new_cache["k"], new_cache["v"], block_tables, kv_offset,
+                kv_len, causal=True, window=window)
+        else:
+            new_cache, kf, vf = paged_kv_update(cache, k, v, block_tables,
+                                                kv_offset, write_mask)
+            out = L.attention(
+                q, kf.astype(q.dtype), vf.astype(q.dtype),
+                causal=True, window=window, kv_offset=kv_offset,
+                kv_len=kv_len, opts=opts)
     elif mode == "append":
         # chunked prefill: insert a whole chunk at kv_offset and attend over
         # the cache prefix + causally within the chunk (kv_offset handles the
@@ -140,15 +172,28 @@ def attn_apply(cfg: ArchConfig, opts: ModelOptions, p, x, *, pos,
         # masked-full-cache attention the dense decode runs; window > 0
         # additionally masks positions <= pos - window (the gathered view is
         # in absolute logical layout, so the positional mask is exact)
-        new_cache, kf, vf = paged_kv_update(cache, k, v, block_tables,
-                                            kv_offset, write_mask)
-        kv_len = jnp.minimum(kv_offset + 1, kf.shape[1])
-        if window > 0:
+        cap = block_tables.shape[1] * cache["k"].shape[1]
+        kv_len = jnp.minimum(kv_offset + 1, cap)
+        if opts.use_paged_kernel:
+            # kernel decode is causal with per-row offsets: at sq=1 the mask
+            # kpos <= kv_offset & kpos < kv_len equals the gather path's
+            # causal=False kv_len-only mask
+            from repro.kernels import ops as kernel_ops
+            new_cache = paged_kv_scatter(cache, k, v, block_tables,
+                                         kv_offset, write_mask)
+            out = kernel_ops.paged_attention(
+                q, new_cache["k"], new_cache["v"], block_tables, kv_offset,
+                kv_len, causal=True, window=window)
+        elif window > 0:
+            new_cache, kf, vf = paged_kv_update(cache, k, v, block_tables,
+                                                kv_offset, write_mask)
             out = L.attention(
                 q, kf.astype(q.dtype), vf.astype(q.dtype),
                 causal=True, window=window, kv_offset=kv_offset,
                 kv_len=kv_len, opts=opts)
         else:
+            new_cache, kf, vf = paged_kv_update(cache, k, v, block_tables,
+                                                kv_offset, write_mask)
             out = L.attention(
                 q, kf.astype(q.dtype), vf.astype(q.dtype),
                 causal=False, window=0, kv_offset=0, kv_len=kv_len, opts=opts)

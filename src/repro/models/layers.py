@@ -30,6 +30,9 @@ class ModelOptions:
     attn_kv_chunk: int = 1024
     use_flash_kernel: bool = False  # dispatch to Pallas kernel (TPU target)
     use_mamba_kernel: bool = False
+    use_paged_kernel: bool = False  # paged decode/append attends straight
+    # from the block pool (kernels/paged_attention.py) instead of gathering
+    # each row's full logical K/V view; lowering picked by ops.paged_attention
     moe_capacity_factor: float = 1.25
     moe_expert_chunk: int = 0  # >0: scan expert FFNs in groups of this size
     # (bounds the fp32 weight-grad/gather transients to one group's worth)

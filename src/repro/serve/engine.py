@@ -183,6 +183,7 @@ class ServeStats:
                "peak_live": self.peak_live,
                "slot_occupancy": round(self.slot_occupancy, 4),
                "decode_occupancy": round(self.decode_occupancy, 4),
+               "wall_s": round(self.wall_s, 4),
                "tokens_per_s": round(self.tokens_per_s, 2)}
         if self.ttft_samples:
             out["ttft_p50"] = round(_pctl(self.ttft_samples, 50), 2)
@@ -254,6 +255,9 @@ class ServeEngine:
         self.append_step = pl.make_serve_step(
             cfg, self.opts, self.eng, mesh, "append", with_active=True)
         self.paged = bool(self.eng.paged)
+        if self.opts.use_paged_kernel and not self.paged:
+            raise ValueError("use_paged_kernel attends through block tables; "
+                             "enable eng.paged")
         self.allocator = None
         self.store = None
         self.transfer = None
@@ -406,12 +410,25 @@ class ServeEngine:
         self.cache = self.reset_fn(self.cache, jnp.asarray(mask))
 
     def _block_tables(self, slots):
-        """(K, M, mb_global, max_blocks) int32 local ids; rows not in the
-        call stay -1 (their writes are dropped device-side anyway)."""
+        """(K, M, mb_global, width) int32 local ids; rows not in the call
+        stay -1 (their writes are dropped device-side anyway).
+
+        Under ``use_paged_kernel`` the width is trimmed to the power-of-two
+        bucket covering the longest live table instead of the provisioned
+        ``max_blocks`` — the kernel path's per-call work then scales with
+        live length, not max_seq (the gather path always pays full width).
+        Bucketing bounds step recompiles to log2(max_blocks) shapes."""
+        width = self.max_blocks
+        if self.opts.use_paged_kernel:
+            live = max((len(s.table.blocks) for s in slots), default=1)
+            width = 1
+            while width < max(live, 1):
+                width *= 2
+            width = min(width, self.max_blocks)
         bt = np.full((self.n_arches, self.eng.n_microbatches, self.mb_global,
-                      self.max_blocks), -1, np.int32)
+                      width), -1, np.int32)
         for s in slots:
-            bt[s.k, s.m, s.b] = s.table.as_row(self.max_blocks)
+            bt[s.k, s.m, s.b] = s.table.as_row(width)
         return bt
 
     def _prepare(self, slots, extra) -> list:
