@@ -41,6 +41,13 @@ Three claims under test:
   and the single-device oracle. Both engines are timed on a second run with
   warm jit caches (the kernel path compiles one step per power-of-two table
   bucket; compile time is excluded from the comparison for both).
+* ``serve/fused_admission`` — fused mixed-tick admission: folding each
+  round's per-chunk-length prefill waves and the decode step into ONE
+  pipeline program (per-row ragged q-lengths: chunk width prefilling, 1
+  decoding, 0 idle) must issue strictly fewer pipeline calls than the
+  split schedule on an admission-heavy trace, with no drop in decode
+  occupancy and greedy tokens + tick latencies bit-identical to split
+  (and tokens matching the single-device oracle).
 
 ``serve/admission_policies`` additionally reports p95 TTFT for the
 fcfs / sjf / deadline batcher policies on one shared Poisson trace.
@@ -295,15 +302,15 @@ pk_traces = {
     for S in pk_seqs}
 
 
-def pk_oracle(req):
-    p1 = jax.tree.map(lambda x: x[0], params_pk)
+def serve_oracle(req, params_o, max_pos):
+    p1 = jax.tree.map(lambda x: x[0], params_o)
     vpad = p1["embed"]["tok"].shape[0]
     if vpad != cfg.vocab_size:
         p1["embed"]["tok"] = p1["embed"]["tok"][:cfg.vocab_size]
         if "head" in p1:
             p1["head"] = p1["head"][:, :cfg.vocab_size]
     n_stack = jax.tree.leaves(p1["layers"])[0].shape[0]
-    cache = lm.init_cache(cfg, 1, PK_MAX, cache_dtype=jnp.float32,
+    cache = lm.init_cache(cfg, 1, max_pos, cache_dtype=jnp.float32,
                           n_layers=n_stack)
     logits, cache, _ = lm.forward(cfg, opts, p1,
                                   {"tokens": jnp.asarray(req.prompt[None])},
@@ -338,8 +345,37 @@ for S in pk_seqs:
     }
     if S == max(pk_seqs):
         entry["oracle_mismatches"] = sum(
-            pk_oracle(r) != res["kernel"][1][r.rid] for r in pk_traces[S])
+            serve_oracle(r, params_pk, PK_MAX) != res["kernel"][1][r.rid]
+            for r in pk_traces[S])
     pk["seqs"][str(S)] = entry
+
+# --- fused mixed-tick admission: one pipeline program per round -----------
+# admission-heavy trace: a fast Poisson stream keeps several cells mid-
+# prefill at staggered chunk widths while others decode — the split
+# schedule pays one append call per chunk-length group plus a decode call
+# per round, the fused schedule one mixed call (plus a tail decode on
+# rounds where a prompt completes)
+fa_eng = dataclasses.replace(base, n_microbatches=2, paged=True,
+                             block_size=BLOCK, n_blocks=40)
+fa_reqs = poisson_trace(16, rate=4.0, vocab=cfg.vocab_size,
+                        prompt_lens=(6, 12), gen_lens=(2, 5), seed=23)
+e_split_fa = ServeEngine(cfg, fa_eng, mesh, params, opts)
+comp_split_fa = e_split_fa.run(clone(fa_reqs))
+e_fused_fa = ServeEngine(cfg, fa_eng, mesh, params, opts, fused=True)
+comp_fused_fa = e_fused_fa.run(clone(fa_reqs))
+fa = {
+    "n_requests": len(fa_reqs),
+    "token_mismatches": sum(a.tokens != b.tokens for a, b in
+                            zip(comp_split_fa, comp_fused_fa)),
+    "latency_mismatches": sum(
+        a.ttft_ticks != b.ttft_ticks or a.finished_tick != b.finished_tick
+        for a, b in zip(comp_split_fa, comp_fused_fa)),
+    "oracle_mismatches": sum(
+        serve_oracle(r, params, MAX_SEQ) != comp_fused_fa[i].tokens
+        for i, r in enumerate(fa_reqs[:6])),
+    "fused": e_fused_fa.stats.summary(),
+    "split": e_split_fa.stats.summary(),
+}
 
 # --- continuous vs static (uniform prompts, staggered budgets) ------------
 PROMPT, MAX_GEN, N_REQ = 8, 8, 18
@@ -365,7 +401,8 @@ print(json.dumps({
     "token_mismatches": mism,
     "continuous": cs.summary(), "static": ss.summary(),
     "paged_vs_dense": pvd, "multiarch": mvs, "policies": pol,
-    "prefix": pfx, "overcommit": ovc, "spill": spl, "paged_kernel": pk}))
+    "prefix": pfx, "overcommit": ovc, "spill": spl, "paged_kernel": pk,
+    "fused": fa}))
 """
 
 
@@ -588,6 +625,39 @@ def run() -> list:
             or top["oracle_mismatches"]
             or top["kernel"]["tokens_per_s"]
             <= top["gather"]["tokens_per_s"]):
+        row["us_per_call"] = -1
+    rows.append(row)
+    fa = d["fused"]
+    fu, sp = fa["fused"], fa["split"]
+    row = {
+        "name": "serve/fused_admission",
+        "us_per_call": upc(fu),
+        "derived": {
+            "n_requests": fa["n_requests"],
+            "calls_fused": fu["calls"],
+            "calls_split": sp["calls"],
+            "mixed_calls": fu.get("mixed_calls", 0),
+            "mixed_fill_ratio": fu.get("mixed_fill_ratio"),
+            "decode_occupancy_fused": fu["decode_occupancy"],
+            "decode_occupancy_split": sp["decode_occupancy"],
+            "tokens_per_s_fused": fu["tokens_per_s"],
+            "tokens_per_s_split": sp["tokens_per_s"],
+            "ttft_p95_fused": fu.get("ttft_p95"),
+            "ttft_p95_split": sp.get("ttft_p95"),
+            "token_mismatches": fa["token_mismatches"],
+            "latency_mismatches": fa["latency_mismatches"],
+            "oracle_mismatches": fa["oracle_mismatches"],
+        },
+    }
+    # the fused-admission claim IS a failure condition: folding the round's
+    # prefill waves + decode into one mixed-tick program must issue strictly
+    # fewer pipeline calls on the admission-heavy trace without degrading
+    # decode occupancy, with greedy tokens AND tick latencies bit-identical
+    # to the split schedule and tokens matching the single-device oracle
+    if (fa["token_mismatches"] or fa["latency_mismatches"]
+            or fa["oracle_mismatches"]
+            or fu["calls"] >= sp["calls"]
+            or fu["decode_occupancy"] < sp["decode_occupancy"]):
         row["us_per_call"] = -1
     rows.append(row)
     return rows

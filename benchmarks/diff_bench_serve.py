@@ -1,0 +1,158 @@
+"""Bench-regression wall: diff a fresh ``BENCH_serve.json`` against the
+committed baseline and fail on throughput regressions.
+
+The flat ``{row, metric, value, units}`` trajectory written by
+``benchmarks/run.py --json`` is committed at the repo root as the
+reference point. CI snapshots that committed file before the smoke bench
+runs (the run overwrites it in the workspace when green), then calls
+
+    python benchmarks/diff_bench_serve.py BASELINE FRESH
+
+Gated metrics are the serve throughput numbers — ``tokens_per_s*`` /
+``tokens_per_tick*`` (higher is better) and ``us_per_call`` (lower is
+better). Any gated metric moving more than ``--threshold`` (default 15%)
+in the bad direction fails the diff with exit 1. Everything else in the
+trajectory is informational. A before/after markdown table is appended to
+``$GITHUB_STEP_SUMMARY`` when that variable is set (or ``--summary PATH``).
+
+``--self-test`` exercises the wall itself: a synthetic 20% throughput drop
+must fail and an unchanged trajectory must pass, so a broken comparator
+can never rubber-stamp a real regression.
+"""
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_THRESHOLD = 0.15
+
+# (metric-name substring, higher_is_better) — first match wins; metrics
+# matching nothing are reported but never gated
+GATED = (
+    ("tokens_per_s", True),
+    ("tokens_per_tick", True),
+    ("us_per_call", False),
+)
+
+
+def gated_direction(metric):
+    for sub, higher_is_better in GATED:
+        if sub in metric:
+            return higher_is_better
+    return None
+
+
+def load(path):
+    with open(path) as f:
+        recs = json.load(f)
+    return {(r["row"], r["metric"]): float(r["value"]) for r in recs}
+
+
+def diff(base, fresh, threshold=DEFAULT_THRESHOLD):
+    """Compare two flat trajectories. Returns (entries, failures): entries
+    are (row, metric, before, after, delta_frac, gated, regressed) for every
+    gated metric present in both files; failures is the regressed subset."""
+    entries = []
+    for key in sorted(set(base) & set(fresh)):
+        row, metric = key
+        higher_is_better = gated_direction(metric)
+        if higher_is_better is None:
+            continue
+        before, after = base[key], fresh[key]
+        if before == 0:
+            continue  # no meaningful relative delta
+        delta = (after - before) / abs(before)
+        regressed = (delta < -threshold if higher_is_better
+                     else delta > threshold)
+        entries.append((row, metric, before, after, delta, regressed))
+    failures = [e for e in entries if e[5]]
+    return entries, failures
+
+
+def render_markdown(entries, failures, threshold):
+    lines = ["## serve bench regression wall",
+             "",
+             f"threshold: {threshold:.0%} on gated throughput metrics "
+             f"({len(failures)} regression(s), {len(entries)} compared)",
+             "",
+             "| row | metric | baseline | fresh | delta | |",
+             "|---|---|---:|---:|---:|---|"]
+    for row, metric, before, after, delta, regressed in entries:
+        flag = "REGRESSED" if regressed else ""
+        lines.append(f"| {row} | {metric} | {before:g} | {after:g} "
+                     f"| {delta:+.1%} | {flag} |")
+    return "\n".join(lines) + "\n"
+
+
+def self_test():
+    """The wall must catch a synthetic 20% drop and pass a clean rerun."""
+    base = {
+        ("serve/x", "tokens_per_s_fused"): 100.0,
+        ("serve/x", "us_per_call"): 50.0,
+        ("serve/x", "decode_occupancy_fused"): 0.9,  # not gated
+    }
+    same = dict(base)
+    entries, failures = diff(base, same)
+    assert len(entries) == 2 and not failures, \
+        f"clean rerun flagged: {failures}"
+    dropped = dict(base)
+    dropped[("serve/x", "tokens_per_s_fused")] = 80.0  # -20% throughput
+    _, failures = diff(base, dropped)
+    assert [f[1] for f in failures] == ["tokens_per_s_fused"], \
+        f"20% tok/s drop not caught: {failures}"
+    slower = dict(base)
+    slower[("serve/x", "us_per_call")] = 60.0  # +20% per-call cost
+    _, failures = diff(base, slower)
+    assert [f[1] for f in failures] == ["us_per_call"], \
+        f"20% us/call increase not caught: {failures}"
+    within = dict(base)
+    within[("serve/x", "tokens_per_s_fused")] = 90.0  # -10%: inside the wall
+    _, failures = diff(base, within)
+    assert not failures, f"10% drop wrongly flagged: {failures}"
+    print("self-test passed: 20% drops fail, <=15% noise and reruns pass")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", nargs="?",
+                    help="committed BENCH_serve.json snapshot")
+    ap.add_argument("fresh", nargs="?",
+                    help="freshly generated BENCH_serve.json")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="max tolerated fractional regression on gated "
+                    "metrics (default 0.15)")
+    ap.add_argument("--summary", default=os.environ.get(
+        "GITHUB_STEP_SUMMARY", ""),
+                    help="append the before/after markdown table here "
+                    "(default $GITHUB_STEP_SUMMARY)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the wall catches a synthetic 20% drop")
+    args = ap.parse_args()
+    if args.self_test:
+        self_test()
+        return
+    if not (args.baseline and args.fresh):
+        ap.error("baseline and fresh paths are required (or --self-test)")
+    base, fresh = load(args.baseline), load(args.fresh)
+    entries, failures = diff(base, fresh, args.threshold)
+    md = render_markdown(entries, failures, args.threshold)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(md + "\n")
+    for row, metric, before, after, delta, regressed in entries:
+        mark = " <-- REGRESSED" if regressed else ""
+        print(f"{row:40s} {metric:32s} {before:>12g} -> {after:>12g} "
+              f"({delta:+.1%}){mark}")
+    if not entries:
+        print("no gated metrics in common — nothing to compare",
+              file=sys.stderr)
+    if failures:
+        print(f"\n{len(failures)} gated metric(s) regressed past "
+              f"{args.threshold:.0%}", file=sys.stderr)
+        sys.exit(1)
+    print(f"\nregression wall clean ({len(entries)} gated metrics within "
+          f"{args.threshold:.0%})")
+
+
+if __name__ == "__main__":
+    main()

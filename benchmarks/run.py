@@ -120,12 +120,21 @@ def main() -> None:
             print(f"{r['name']},{r['us_per_call']},"
                   f"\"{json.dumps(r['derived'])}\"")
     if json_path:
+        # the raw --json dump is diagnostic and always written — failed rows
+        # included — so CI artifacts capture exactly what ran
         d = os.path.dirname(json_path)
         if d:
             os.makedirs(d, exist_ok=True)
         with open(json_path, "w") as f:
             json.dump(all_rows, f, indent=2)
-        if write_bench_serve(all_rows, os.path.join(ROOT, "BENCH_serve.json")):
+        # the repo-root trajectory is the committed baseline future runs diff
+        # against: refresh it only when EVERY row passed (a harness error in
+        # any section means this run is not a trustworthy reference point)
+        if failed:
+            print("skipping BENCH_serve.json: failed rows present",
+                  file=sys.stderr)
+        elif write_bench_serve(all_rows,
+                               os.path.join(ROOT, "BENCH_serve.json")):
             print(f"wrote BENCH_serve.json ({len(all_rows)} rows scanned)",
                   file=sys.stderr)
     if failed:

@@ -720,6 +720,12 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
     co-serving axis: every slot tick indexes params, cache slices, and block
     tables by its own trial k, so one call advances cells of K different
     model variants at once.
+    mixed: append plus ``batch["qlens"]`` (K,M,mb) int32 per-row real query
+    counts — one fused tick advancing prefill chunks (qlen = chunk width)
+    AND decode rows (qlen = 1) AND idle rows (qlen = 0) in a single ragged
+    wave padded to the wave max. Padded positions are never written to the
+    cache and attend to nothing; the head samples each row at its own last
+    real position (qlens - 1) instead of the trailing column.
     All modes accept an optional ``batch["active"]`` (K,M,mb) bool row mask:
     inactive rows compute (SPMD shapes are static) but their cache rows are
     left untouched, so idle slots can ride along in a live batch.
@@ -730,8 +736,8 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
     cache footprint is the pool, not slots × max_seq.
     Returns (new_cache, tokens_out (K,M,mb), logit_max (K,M,mb)).
     """
-    if eng.paged and mode not in ("append", "decode"):
-        raise ValueError(f"paged serving supports append/decode only, "
+    if eng.paged and mode not in ("append", "decode", "mixed"):
+        raise ValueError(f"paged serving supports append/decode/mixed only, "
                          f"got mode={mode!r}")
     S = eng.n_stages
     K, M = eng.n_trials, eng.n_microbatches
@@ -748,8 +754,10 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
     cdt = opts.compute_dtype
     nc = eng.prefill_chunks if (mode == "prefill"
                                 and eng.prefill_chunks > 1) else 1
-    stack_mode = "append" if (nc > 1 or mode == "append") else mode
+    stack_mode = ("append" if (nc > 1 or mode in ("append", "mixed"))
+                  else mode)
     active = batch.get("active")
+    qlens = batch.get("qlens") if mode == "mixed" else None
 
     def chunk_of(m):
         return m % nc if nc > 1 else jnp.zeros((), jnp.int32)
@@ -764,7 +772,7 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
         tok = _take2({"t": tokens}, k, m)["t"]
         if mode == "decode":
             pos = _take2({"p": batch["positions"]}, k, m)["p"][:, None]
-        elif mode == "append":
+        elif mode in ("append", "mixed"):
             pos = slot_pos(slot)  # (mb, qlen) per-row absolute positions
         else:
             pos = chunk_of(m) * qlen + jnp.broadcast_to(
@@ -786,9 +794,17 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
             if cfg.rope == "mrope":
                 return jnp.broadcast_to(p, (3, mb, 1))
             return p
-        if mode == "append":
+        if mode in ("append", "mixed"):
             start = _take2({"p": batch["positions"]}, k, m)["p"]
-            return start[:, None] + jnp.arange(qlen)[None, :]
+            pos = start[:, None] + jnp.arange(qlen)[None, :]
+            if qlens is not None:
+                # clamp padded positions to the row's last real one — they
+                # are compute-only (writes dropped, outputs discarded) but
+                # must stay inside any position-table/rope range
+                ql = _take2({"q": qlens}, k, m)["q"]
+                pos = jnp.minimum(
+                    pos, (start + jnp.maximum(ql - 1, 0))[:, None])
+            return pos
         if cfg.rope == "mrope":
             return _take2({"p": batch["mrope_pos"]}, k, m)["p"]
         return chunk_of(m) * qlen + jnp.broadcast_to(
@@ -852,10 +868,13 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
             shared = (_take1(params["shared"], k_cur)
                       if "shared" in params else None)
             kv_off = None
-            if mode in ("decode", "append"):
+            if mode in ("decode", "append", "mixed"):
                 kv_off = _take2({"p": batch["positions"]}, k_cur, m_cur)["p"]
             elif nc > 1:
                 kv_off = jnp.full((mb,), chunk_of(m_cur) * qlen, jnp.int32)
+            ql_cur = None
+            if qlens is not None:
+                ql_cur = _take2({"q": qlens}, k_cur, m_cur)["q"]
             if eng.paged:
                 # the pool is shared across slots: slice per trial only, and
                 # gate writes (idle rows, bubble ticks) inside the scatter —
@@ -873,7 +892,8 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
                     mode=stack_mode, cache=c_slice, shared_params=shared,
                     layer_mask=layer_mask, layer_offset=layer_offset,
                     kv_offset=kv_off, window=eng.window,
-                    layer_param_fn=gather_fn, block_tables=bt, write_mask=wm)
+                    layer_param_fn=gather_fn, block_tables=bt, write_mask=wm,
+                    q_lens=ql_cur)
                 new_layers = jax.tree.map(
                     lambda buf, new: lax.dynamic_update_slice(
                         buf, new[None].astype(buf.dtype),
@@ -886,7 +906,7 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
                 mode=stack_mode, cache=c_slice, shared_params=shared,
                 layer_mask=layer_mask, layer_offset=layer_offset,
                 kv_offset=kv_off, window=eng.window,
-                layer_param_fn=gather_fn)
+                layer_param_fn=gather_fn, q_lens=ql_cur)
             return y, put_cache(cache, k_cur, m_cur, c_new, valid_cur,
                                 slot_rows_active(k_cur, m_cur))
 
@@ -899,7 +919,15 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
         slot_out = t - (S - 1)
         valid_out = (slot_out >= 0) & (slot_out < eng.n_slots)
         k_out, m_out = _slot_ids(eng, slot_out)
-        y_last = lax.psum(jnp.where(s_idx == S - 1, y[:, -1:], 0.0),
+        if qlens is not None:
+            # mixed ragged wave: each row's chunk ends at its own qlens - 1,
+            # not the padded trailing column
+            ql_out = _take2({"q": qlens}, k_out, m_out)["q"]
+            sel = jnp.clip(ql_out - 1, 0, qlen - 1)[:, None, None]
+            y_head = jnp.take_along_axis(y, sel, axis=1)
+        else:
+            y_head = y[:, -1:]
+        y_last = lax.psum(jnp.where(s_idx == S - 1, y_head, 0.0),
                           eng.stage_axis)
         norm_k = _take1({"n": params["final_norm"]}, k_out)["n"]
         head_k = _take1({"h": params["head"]}, k_out)["h"]
@@ -943,17 +971,25 @@ def make_serve_step(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
                     with_active: bool = False) -> Callable:
     """Builds the jitted pipelined serving step.
 
-    ``mode``: prefill | decode | append. ``append`` is the continuous-batching
-    admission step: qlen tokens per row inserted at per-row cache depths
-    (batch carries ``positions`` start offsets). ``with_active=True`` adds a
+    ``mode``: prefill | decode | append | mixed. ``append`` is the
+    continuous-batching admission step: qlen tokens per row inserted at
+    per-row cache depths (batch carries ``positions`` start offsets).
+    ``mixed`` is the fused-admission tick: append semantics plus a (K,M,mb)
+    int32 ``qlens`` batch entry giving each row's real query count (chunk
+    width / 1 for decode / 0 for idle), so one program advances prefill and
+    decode rows together. ``with_active=True`` adds a
     (K,M,mb) bool ``active`` row mask to the batch: inactive rows never touch
     their cache (the serve engine uses it to let idle/decoding slots ride
     along during admission and vice versa).
     Returns fn(params, cache, batch) -> (new_cache, tokens, logit_max).
     """
-    if mode == "append" and cfg.rope == "mrope":
+    if mode in ("append", "mixed") and cfg.rope == "mrope":
         raise ValueError("append mode (continuous batching) does not support "
                          "mrope archs; use the static prefill path")
+    if mode == "mixed" and cfg.family in ("ssm", "hybrid"):
+        raise ValueError("mixed-tick serving is attention-family only: "
+                         "ragged padded tokens would advance recurrent "
+                         "SSM state")
     pspecs = param_pspecs(cfg, eng)
     bspecs = batch_pspecs(cfg, eng, train=False)
     if mode == "prefill":
@@ -962,6 +998,9 @@ def make_serve_step(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
         # the cache (written by a static prefill)
         bspecs.pop("frontend_embeds", None)
         bspecs.pop("mrope_pos", None)
+    if mode == "mixed":
+        bspecs["qlens"] = P(None, None,
+                            None if eng.batch_replicated else eng.dp_axes)
     if with_active:
         bspecs["active"] = P(None, None,
                              None if eng.batch_replicated else eng.dp_axes)

@@ -110,10 +110,12 @@ def _paged_mode() -> str:
 
 @functools.partial(jax.jit, static_argnames=("causal", "window"))
 def paged_attention(q, k_pool, v_pool, block_tables, kv_offset, kv_len, *,
-                    causal: bool = True, window: int = 0):
+                    causal: bool = True, window: int = 0, q_lens=None):
     """q (b, sq, hq, hd); k/v pool (n_blocks, block_size, hkv, hd);
     block_tables (b, n_tbl) int32 (-1 = unallocated); kv_offset/kv_len (b,)
-    per-row cache depth / live length. Returns (b, sq, hq, hd).
+    per-row cache depth / live length. ``q_lens (b,)`` (optional) is each
+    row's real query count in a mixed ragged wave — padded positions emit
+    zeros. Returns (b, sq, hq, hd).
 
     GQA, per-row ragged offsets, kv_len masking and the sliding window are
     all handled in-kernel (see kernels/paged_attention.py); the gathered
@@ -126,11 +128,12 @@ def paged_attention(q, k_pool, v_pool, block_tables, kv_offset, kv_len, *,
         from repro.kernels.ref import paged_attention_ref
         return paged_attention_ref(q, k_pool, v_pool, block_tables,
                                    kv_offset, kv_len, causal=causal,
-                                   window=window)
+                                   window=window, q_lens=q_lens)
     return pa.paged_attention_pool(
         q, k_pool, v_pool, block_tables,
         jnp.asarray(kv_offset, jnp.int32), jnp.asarray(kv_len, jnp.int32),
-        causal=causal, window=window, interpret=(mode == "interpret"))
+        causal=causal, window=window, interpret=(mode == "interpret"),
+        q_lens=None if q_lens is None else jnp.asarray(q_lens, jnp.int32))
 
 
 # ---------------------------------------------------------------------------

@@ -30,17 +30,22 @@ Layout & grid
       replaced by double-buffered ``make_async_copy`` — the noted next step.
 
 Scalar-prefetch scheme
-    ``block_tables (b, n_tbl)``, ``kv_offset (b,)`` and ``kv_len (b,)`` are
-    scalar-prefetched (``pltpu.PrefetchScalarGridSpec``): the blockspec
-    variant's K/V index maps read ``block_tables[ib, t]`` to pick the
-    physical block for grid step (ib, ·, t), the loop variant reads the same
-    tables inside the body. Unallocated entries (-1) are clamped to block 0
-    and neutralized by the masks below.
+    ``block_tables (b, n_tbl)``, ``kv_offset (b,)``, ``kv_len (b,)`` and
+    ``q_lens (b,)`` are scalar-prefetched
+    (``pltpu.PrefetchScalarGridSpec``): the blockspec variant's K/V index
+    maps read ``block_tables[ib, t]`` to pick the physical block for grid
+    step (ib, ·, t), the loop variant reads the same tables inside the
+    body. Unallocated entries (-1) are clamped to block 0 and neutralized
+    by the masks below.
 
 Masking semantics (all in-kernel, per row ib)
     * ``kpos >= kv_len[ib]`` — stale pool tokens / unallocated tail: masked.
     * causal: ``kpos <= kv_offset[ib] + q_row`` (per-row ragged offsets —
       rows of one call may sit at different cache depths).
+    * ``q_row >= q_lens[ib]`` — mixed-tick ragged padding: a wave packs
+      rows of different chunk widths to one ``sq``; a row's padded query
+      positions attend to nothing and emit zeros (decode rows are the
+      ``q_lens = 1`` case, idle rows ``q_lens = 0``).
     * sliding window > 0: ``kpos > qpos - window``.
     * table steps with no live position (``t·block_size >= kv_len[ib]``, or
       wholly below the window) are skipped — ``pl.when`` in the blockspec
@@ -74,12 +79,14 @@ except Exception:  # pragma: no cover - very old jax
 NEG_INF = -1e30
 
 
-def _accumulate(q, k, v, t, off, kv_end, m_prev, l_prev, acc_prev, *,
+def _accumulate(q, k, v, t, off, kv_end, q_len, m_prev, l_prev, acc_prev, *,
                 scale, causal, window, block_size, sq_real, rows_real):
     """One online-softmax step over physical block ``t`` (all fp32).
 
     q (rows, hd), k/v (block_size, hd); returns updated (m, l, acc).
-    Shared by both kernel variants so the masking semantics cannot drift.
+    ``q_len`` masks ragged query padding (mixed-tick waves); fully masked
+    rows keep m at NEG_INF so they finalize to zeros. Shared by both kernel
+    variants so the masking semantics cannot drift.
     """
     s = lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                         preferred_element_type=jnp.float32) * scale
@@ -89,7 +96,7 @@ def _accumulate(q, k, v, t, off, kv_end, m_prev, l_prev, acc_prev, *,
     kpos = t * block_size + lax.broadcasted_iota(
         jnp.int32, (rows, block_size), 1)
     qpos = off + qi
-    mask = (kpos < kv_end) & (ri < rows_real)
+    mask = (kpos < kv_end) & (ri < rows_real) & (qi < q_len)
     if causal:
         mask &= kpos <= qpos
     if window > 0:
@@ -104,8 +111,8 @@ def _accumulate(q, k, v, t, off, kv_end, m_prev, l_prev, acc_prev, *,
     return m_new, l_prev * alpha + jnp.sum(p, axis=-1), acc
 
 
-def _paged_kernel(tbl_ref, off_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_ref, l_ref, acc_ref, *, scale: float, causal: bool,
+def _paged_kernel(tbl_ref, off_ref, len_ref, ql_ref, q_ref, k_ref, v_ref,
+                  o_ref, m_ref, l_ref, acc_ref, *, scale: float, causal: bool,
                   window: int, block_size: int, sq_real: int, rows_real: int,
                   n_tbl: int):
     """Blockspec variant body: one grid step = one table entry."""
@@ -120,6 +127,7 @@ def _paged_kernel(tbl_ref, off_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
     off = off_ref[ib]
     kv_end = len_ref[ib]
+    q_len = ql_ref[ib]
     # skip table steps with no attendable position: past the row's live
     # length, or (windowed) wholly below every query's window
     live = (t * block_size) < kv_end
@@ -132,7 +140,7 @@ def _paged_kernel(tbl_ref, off_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
             q_ref[0, 0].astype(jnp.float32),
             k_ref[0, :, 0].astype(jnp.float32),
             v_ref[0, :, 0].astype(jnp.float32),
-            t, off, kv_end, m_ref[...], l_ref[...], acc_ref[...],
+            t, off, kv_end, q_len, m_ref[...], l_ref[...], acc_ref[...],
             scale=scale, causal=causal, window=window, block_size=block_size,
             sq_real=sq_real, rows_real=rows_real)
 
@@ -142,15 +150,16 @@ def _paged_kernel(tbl_ref, off_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = out.astype(o_ref.dtype)
 
 
-def _paged_kernel_loop(tbl_ref, off_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                       *, scale: float, causal: bool, window: int,
-                       block_size: int, sq_real: int, rows_real: int,
-                       rows: int, hd: int):
+def _paged_kernel_loop(tbl_ref, off_ref, len_ref, ql_ref, q_ref, k_ref,
+                       v_ref, o_ref, *, scale: float, causal: bool,
+                       window: int, block_size: int, sq_real: int,
+                       rows_real: int, rows: int, hd: int):
     """Loop variant body: fori_loop over the row's live table entries."""
     ib = pl.program_id(0)
     ih = pl.program_id(1)
     off = off_ref[ib]
     kv_end = len_ref[ib]
+    q_len = ql_ref[ib]
     q = q_ref[0, 0].astype(jnp.float32)
 
     def body(t, carry):
@@ -160,7 +169,7 @@ def _paged_kernel_loop(tbl_ref, off_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         v = pl.load(v_ref, (phys, slice(None), ih, slice(None)))
         return _accumulate(
             q, k.astype(jnp.float32), v.astype(jnp.float32),
-            t, off, kv_end, m, l, acc, scale=scale, causal=causal,
+            t, off, kv_end, q_len, m, l, acc, scale=scale, causal=causal,
             window=window, block_size=block_size, sq_real=sq_real,
             rows_real=rows_real)
 
@@ -179,10 +188,15 @@ def _paged_kernel_loop(tbl_ref, off_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 def paged_attention_pool(q, k_pool, v_pool, block_tables, kv_offset, kv_len,
                          *, causal: bool = True, window: int = 0,
-                         interpret: bool = False, variant: str | None = None):
+                         interpret: bool = False, variant: str | None = None,
+                         q_lens=None):
     """Core pallas_call. q (b, sq, hq, hd); k/v pool (n_blocks, block_size,
     h_kv, hd); block_tables (b, n_tbl) int32 physical ids (-1 unallocated);
     kv_offset/kv_len (b,) int32. Returns (b, sq, hq, hd).
+
+    ``q_lens (b,)`` (optional) gives each row's real query count for mixed
+    ragged waves — positions ``>= q_lens[ib]`` are padding and emit zeros;
+    ``None`` means every row uses all ``sq`` positions.
 
     ``variant`` defaults to "loop" under interpret (CPU) and "blockspec"
     compiled (TPU). Rows whose table holds no live blocks (kv_len 0 / fully
@@ -192,6 +206,8 @@ def paged_attention_pool(q, k_pool, v_pool, block_tables, kv_offset, kv_len,
     if variant is None:
         variant = "loop" if interpret else "blockspec"
     b, sq, hq, hd = q.shape
+    if q_lens is None:
+        q_lens = jnp.full((b,), sq, jnp.int32)
     nb, bs, hkv, _ = k_pool.shape
     n_tbl = block_tables.shape[1]
     g = hq // hkv
@@ -211,38 +227,39 @@ def paged_attention_pool(q, k_pool, v_pool, block_tables, kv_offset, kv_len,
         kernel = functools.partial(_paged_kernel_loop, rows=rows, hd=hd,
                                    **common)
         grid_spec = PrefetchScalarGridSpec(
-            num_scalar_prefetch=3,
+            num_scalar_prefetch=4,
             grid=(b, hkv),
             in_specs=[
                 pl.BlockSpec((1, 1, rows, hd),
-                             lambda ib, ih, tbl, off, ln: (ib, ih, 0, 0)),
+                             lambda ib, ih, tbl, off, ln, ql: (ib, ih, 0, 0)),
                 pl.BlockSpec(memory_space=pltpu.ANY),
                 pl.BlockSpec(memory_space=pltpu.ANY),
             ],
             out_specs=pl.BlockSpec((1, 1, rows, hd),
-                                   lambda ib, ih, tbl, off, ln:
+                                   lambda ib, ih, tbl, off, ln, ql:
                                    (ib, ih, 0, 0)),
         )
     else:
         kernel = functools.partial(_paged_kernel, n_tbl=n_tbl, **common)
         grid_spec = PrefetchScalarGridSpec(
-            num_scalar_prefetch=3,
+            num_scalar_prefetch=4,
             grid=(b, hkv, n_tbl),
             in_specs=[
                 pl.BlockSpec((1, 1, rows, hd),
-                             lambda ib, ih, t, tbl, off, ln: (ib, ih, 0, 0)),
+                             lambda ib, ih, t, tbl, off, ln, ql:
+                             (ib, ih, 0, 0)),
                 # the pool indirection: table entry t of row ib names the
                 # physical block streamed at grid step (ib, ih, t); -1 clamps
                 # to block 0 (its positions are masked via kv_len)
                 pl.BlockSpec((1, bs, 1, hd),
-                             lambda ib, ih, t, tbl, off, ln:
+                             lambda ib, ih, t, tbl, off, ln, ql:
                              (jnp.maximum(tbl[ib, t], 0), 0, ih, 0)),
                 pl.BlockSpec((1, bs, 1, hd),
-                             lambda ib, ih, t, tbl, off, ln:
+                             lambda ib, ih, t, tbl, off, ln, ql:
                              (jnp.maximum(tbl[ib, t], 0), 0, ih, 0)),
             ],
             out_specs=pl.BlockSpec((1, 1, rows, hd),
-                                   lambda ib, ih, t, tbl, off, ln:
+                                   lambda ib, ih, t, tbl, off, ln, ql:
                                    (ib, ih, 0, 0)),
             scratch_shapes=[
                 VMEM((rows,), jnp.float32),      # running max m
@@ -256,7 +273,7 @@ def paged_attention_pool(q, k_pool, v_pool, block_tables, kv_offset, kv_len,
         out_shape=jax.ShapeDtypeStruct((b, hkv, rows, hd), q.dtype),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), kv_offset.astype(jnp.int32),
-      kv_len.astype(jnp.int32), qp, k_pool, v_pool)
+      kv_len.astype(jnp.int32), q_lens.astype(jnp.int32), qp, k_pool, v_pool)
     return (out[:, :, :rows_real]
             .reshape(b, hkv, g, sq, hd)
             .transpose(0, 3, 1, 2, 4)

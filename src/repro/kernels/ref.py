@@ -20,13 +20,15 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, kv_offset=0,
 
 
 def paged_attention_ref(q, k_pool, v_pool, block_tables, kv_offset, kv_len,
-                        *, causal=True, window=0):
+                        *, causal=True, window=0, q_lens=None):
     """Gather-then-attend oracle for the paged kernel (fp32 math).
 
     Materializes each row's full logical K/V view through its block table
     (the exact path ``blocks.paged_kv_update`` takes) and runs the direct-
     softmax reference over it — the kernel must match this on live
-    positions while never building the gathered view.
+    positions while never building the gathered view. ``q_lens (b,)``
+    mirrors the kernel's ragged-wave semantics: query positions past a
+    row's real count are zeroed.
     """
     nb, bs = k_pool.shape[0], k_pool.shape[1]
     b = q.shape[0]
@@ -34,10 +36,14 @@ def paged_attention_ref(q, k_pool, v_pool, block_tables, kv_offset, kv_len,
             + jnp.arange(bs)[None, None, :]).reshape(b, -1)
     kf = jnp.take(k_pool.reshape(nb * bs, *k_pool.shape[2:]), span, axis=0)
     vf = jnp.take(v_pool.reshape(nb * bs, *v_pool.shape[2:]), span, axis=0)
-    return attention_reference(q.astype(jnp.float32), kf.astype(jnp.float32),
-                               vf.astype(jnp.float32), causal=causal,
-                               window=window, kv_offset=kv_offset,
-                               kv_len=kv_len).astype(q.dtype)
+    out = attention_reference(q.astype(jnp.float32), kf.astype(jnp.float32),
+                              vf.astype(jnp.float32), causal=causal,
+                              window=window, kv_offset=kv_offset,
+                              kv_len=kv_len)
+    if q_lens is not None:
+        pad = jnp.arange(q.shape[1])[None, :] < q_lens[:, None]
+        out = jnp.where(pad[:, :, None, None], out, 0.0)
+    return out.astype(q.dtype)
 
 
 def mamba_scan_ref(da, dbx, cmat, h0):

@@ -104,6 +104,16 @@ def build_args():
                        "per-request block tables (admit by expected length)")
     cache.add_argument("--dense", action="store_true",
                        help="dense per-slot cache strips (the default)")
+    adm = ap.add_mutually_exclusive_group()
+    adm.add_argument("--fused-admission", action="store_true",
+                     help="fold each round's prefill waves + decode step "
+                     "into ONE mixed-tick pipeline call: prefilling rows "
+                     "ride at their chunk width, decoding rows at qlen 1, "
+                     "idle rows at 0 (attention-family archs; greedy tokens "
+                     "stay bit-identical to the split schedule)")
+    adm.add_argument("--split-admission", action="store_true",
+                     help="one append call per chunk-length group plus a "
+                     "separate decode call per round (the default)")
     attn = ap.add_mutually_exclusive_group()
     attn.add_argument("--paged-kernel", action="store_true",
                       help="paged decode/append attends straight from the "
@@ -182,6 +192,9 @@ def main():
     if args.static and args.arches > 1:
         raise SystemExit("--static is single-arch lockstep batching; "
                          "multi-arch routing needs the continuous engine")
+    if args.fused_admission and args.static:
+        raise SystemExit("--fused-admission fuses the continuous engine's "
+                         "round; drop --static")
     weights = parse_weights(args.arch_weights, args.arches)
     mesh = make_test_mesh(args.n_data, args.n_model)
     cfg = get_config(args.arch)
@@ -281,12 +294,15 @@ def main():
         engine = ServeEngine(cfg, eng, mesh, params, opts,
                              overcommit=args.overcommit, policy=args.policy,
                              prefix_cache=args.prefix_cache,
-                             spill=not args.no_spill)
+                             spill=not args.no_spill,
+                             fused=args.fused_admission)
         completions = engine.run(requests)
         stats = engine.stats
         mode = "continuous/paged" if args.paged else "continuous"
         if args.paged_kernel:
             mode += "+kernel"
+        if args.fused_admission:
+            mode += "+fused"
         if args.prefix_cache:
             mode += "+prefix-cache"
         if args.arches > 1:
@@ -305,6 +321,9 @@ def main():
           f"({s['tokens_per_s']} tok/s on this host)")
     print(f"slot occupancy {s['slot_occupancy']}, "
           f"decode occupancy {s['decode_occupancy']}")
+    if "mixed_calls" in s:
+        print(f"fused admission: {s['mixed_calls']} mixed calls out of "
+              f"{s['calls']}, wave fill ratio {s['mixed_fill_ratio']}")
     if "ttft_p50" in s:
         print(f"TTFT p50/p95 {s['ttft_p50']}/{s['ttft_p95']} ticks, "
               f"TPOT p50/p95 {s.get('tpot_p50', 0)}/{s.get('tpot_p95', 0)} "

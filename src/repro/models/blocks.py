@@ -34,8 +34,10 @@ def paged_kv_scatter(cache, k, v, block_tables, kv_offset, write_mask=None):
     cache {'k','v'}: (n_blocks, block_size, h_kv, hd) — the *pool*, shared by
     every row (no batch axis). block_tables (b, max_blocks) int32 physical ids
     local to this shard's pool slice, -1 = unallocated. kv_offset (b,) is the
-    row's cache depth (tokens already written). Rows with ``write_mask``
-    False — idle cells riding along, or pipeline bubble ticks — write nothing
+    row's cache depth (tokens already written). ``write_mask`` is (b,) rows
+    or (b, s) per-token (mixed ragged waves mask each row's padded tail).
+    Masked entries — idle cells riding along, pipeline bubble ticks, or
+    ragged query padding — write nothing
     (their scatter indices are pushed out of bounds and dropped); the
     allocator guarantees live rows' blocks are disjoint, so the scatters
     never collide. Tokens past table capacity (``pos // bs >= max_blocks``)
@@ -56,7 +58,7 @@ def paged_kv_scatter(cache, k, v, block_tables, kv_offset, write_mask=None):
     phys = jnp.take_along_axis(block_tables, blk, axis=1)  # (b, s)
     ok = (phys >= 0) & (pos // bs < max_blocks)
     if write_mask is not None:
-        ok = ok & write_mask[:, None]
+        ok = ok & (write_mask if write_mask.ndim == 2 else write_mask[:, None])
     flat = jnp.where(ok, phys * bs + pos % bs, nb * bs)  # OOB -> dropped
     pool_k = pool_k.at[flat.reshape(-1)].set(
         k.reshape(b * s, *k.shape[2:]).astype(pool_k.dtype), mode="drop")
@@ -95,13 +97,19 @@ def paged_kv_update(cache, k, v, block_tables, kv_offset, write_mask=None):
 def attn_apply(cfg: ArchConfig, opts: ModelOptions, p, x, *, pos,
                cache=None, kv_offset=None, mode: str = "train",
                window: int = 0, causal: bool = True, block_tables=None,
-               write_mask=None):
+               write_mask=None, q_lens=None):
     """x (b, s, d) -> (b, s, d); cache {'k','v'}: (b, S_max, h_kv, hd).
 
     ``block_tables`` switches the append/decode cache handling to the paged
     pool layout (see :func:`paged_kv_update`): cache is then the shared
     (n_blocks, block_size, h_kv, hd) pool and ``write_mask`` gates which rows
     may write this call.
+
+    ``q_lens (b,)`` activates the mixed-tick ragged-wave semantics in append
+    mode: each row's real query count (chunk width for prefilling cells, 1
+    for decoding cells, 0 for idle), with positions past it padding — never
+    written to the cache, attending to nothing. A decode row is exactly the
+    ``q_lens = 1`` case of append, so one program serves both phases.
     """
     b, s, d = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -132,19 +140,27 @@ def attn_apply(cfg: ArchConfig, opts: ModelOptions, p, x, *, pos,
         # paged chunked prefill: same semantics as the dense append below but
         # K/V live in the shared block pool, reached through per-row tables
         cap = block_tables.shape[1] * cache["k"].shape[1]
-        kv_len = jnp.minimum(kv_offset + s, cap)
+        kv_len = jnp.minimum(kv_offset + (s if q_lens is None else q_lens),
+                             cap)
+        wm = write_mask
+        if q_lens is not None:
+            # mixed ragged wave: only each row's first q_lens tokens are real
+            tok = jnp.arange(s)[None, :] < q_lens[:, None]
+            if wm is not None:
+                tok = tok & (wm if wm.ndim == 2 else wm[:, None])
+            wm = tok
         if opts.use_paged_kernel:
             # scatter only — the kernel attends straight from the pool
             # through the tables, never building the gathered view
             from repro.kernels import ops as kernel_ops
             new_cache = paged_kv_scatter(cache, k, v, block_tables,
-                                         kv_offset, write_mask)
+                                         kv_offset, wm)
             out = kernel_ops.paged_attention(
                 q, new_cache["k"], new_cache["v"], block_tables, kv_offset,
-                kv_len, causal=True, window=window)
+                kv_len, causal=True, window=window, q_lens=q_lens)
         else:
             new_cache, kf, vf = paged_kv_update(cache, k, v, block_tables,
-                                                kv_offset, write_mask)
+                                                kv_offset, wm)
             out = L.attention(
                 q, kf.astype(q.dtype), vf.astype(q.dtype),
                 causal=True, window=window, kv_offset=kv_offset,
@@ -155,14 +171,37 @@ def attn_apply(cfg: ArchConfig, opts: ModelOptions, p, x, *, pos,
         # relative positions). kv_offset is per-row (b,) — rows may sit at
         # different cache depths (continuous-batching admission chunks).
         s_cache = cache["k"].shape[1]
+        if q_lens is not None:
+            # mixed ragged wave: rows are padded to the wave max, and
+            # ``dynamic_update_slice`` CLAMPS out-of-range starts — a decode
+            # row near the strip end would have its padded write shifted
+            # backwards over real history. Scatter per token instead,
+            # dropping padded and out-of-strip targets.
+            tgt = kv_offset[:, None] + jnp.arange(s)[None, :]  # (b, s)
+            ok = (jnp.arange(s)[None, :] < q_lens[:, None]) & (tgt < s_cache)
+            if write_mask is not None:
+                ok = ok & (write_mask if write_mask.ndim == 2
+                           else write_mask[:, None])
+            flat = jnp.where(ok, jnp.arange(b)[:, None] * s_cache + tgt,
+                             b * s_cache)  # OOB -> dropped
 
-        def updm(c, t, o):
-            return lax.dynamic_update_slice(c, t.astype(c.dtype), (o, 0, 0))
-        new_cache = {
-            "k": jax.vmap(updm)(cache["k"], k, kv_offset),
-            "v": jax.vmap(updm)(cache["v"], v, kv_offset),
-        }
-        kv_len = jnp.minimum(kv_offset + s, s_cache)
+            def scat(c, t):
+                cf = c.reshape(b * s_cache, *c.shape[2:])
+                cf = cf.at[flat.reshape(-1)].set(
+                    t.reshape(b * s, *t.shape[2:]).astype(c.dtype),
+                    mode="drop")
+                return cf.reshape(c.shape)
+            new_cache = {"k": scat(cache["k"], k), "v": scat(cache["v"], v)}
+            kv_len = jnp.minimum(kv_offset + q_lens, s_cache)
+        else:
+            def updm(c, t, o):
+                return lax.dynamic_update_slice(c, t.astype(c.dtype),
+                                                (o, 0, 0))
+            new_cache = {
+                "k": jax.vmap(updm)(cache["k"], k, kv_offset),
+                "v": jax.vmap(updm)(cache["v"], v, kv_offset),
+            }
+            kv_len = jnp.minimum(kv_offset + s, s_cache)
         out = L.attention(
             q, new_cache["k"].astype(q.dtype), new_cache["v"].astype(q.dtype),
             causal=True, window=window, kv_offset=kv_offset,
@@ -237,7 +276,7 @@ def attn_apply(cfg: ArchConfig, opts: ModelOptions, p, x, *, pos,
 
 def dense_block(cfg, opts, p, x, *, pos, cache=None, kv_offset=None,
                 mode="train", window: int = 0, block_tables=None,
-                write_mask=None):
+                write_mask=None, q_lens=None):
     causal = cfg.family != "encoder"
     if cfg.family == "encoder":
         h = L.layer_norm(x, p["ln1_w"], p["ln1_b"], cfg.norm_eps)
@@ -246,7 +285,7 @@ def dense_block(cfg, opts, p, x, *, pos, cache=None, kv_offset=None,
     a, new_cache = attn_apply(cfg, opts, p["attn"], h, pos=pos, cache=cache,
                               kv_offset=kv_offset, mode=mode, window=window,
                               causal=causal, block_tables=block_tables,
-                              write_mask=write_mask)
+                              write_mask=write_mask, q_lens=q_lens)
     x = x + a
     if cfg.family == "encoder":
         h = L.layer_norm(x, p["ln2_w"], p["ln2_b"], cfg.norm_eps)
@@ -258,12 +297,12 @@ def dense_block(cfg, opts, p, x, *, pos, cache=None, kv_offset=None,
 
 def moe_block(cfg, opts, p, x, *, pos, cache=None, kv_offset=None,
               mode="train", window: int = 0, block_tables=None,
-              write_mask=None):
+              write_mask=None, q_lens=None):
     h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
     a, new_cache = attn_apply(cfg, opts, p["attn"], h, pos=pos, cache=cache,
                               kv_offset=kv_offset, mode=mode, window=window,
                               block_tables=block_tables,
-                              write_mask=write_mask)
+                              write_mask=write_mask, q_lens=q_lens)
     x = x + a
     h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
     m, aux = L.moe_apply(p["moe"], h, n_experts=cfg.moe.n_experts,
@@ -275,10 +314,12 @@ def moe_block(cfg, opts, p, x, *, pos, cache=None, kv_offset=None,
 
 def ssm_block(cfg, opts, p, x, *, pos, cache=None, kv_offset=None,
               mode="train", window: int = 0, block_tables=None,
-              write_mask=None):
+              write_mask=None, q_lens=None):
     """Mamba1 block (falcon-mamba): norm -> mamba -> residual.
-    (``block_tables``/``write_mask`` are accepted for signature uniformity;
-    recurrent state is O(1) per row and never paged.)"""
+    (``block_tables``/``write_mask``/``q_lens`` are accepted for signature
+    uniformity; recurrent state is O(1) per row and never paged, and ragged
+    mixed waves are attention-family only — padded tokens would advance the
+    recurrent state.)"""
     h = L.rms_norm(x, p["ln"], cfg.norm_eps)
     ssm_s = cache["ssm"] if cache is not None else None
     conv_s = cache["conv"] if cache is not None else None
@@ -292,7 +333,7 @@ def ssm_block(cfg, opts, p, x, *, pos, cache=None, kv_offset=None,
 
 def hybrid_backbone_block(cfg, opts, p, x, *, pos, cache=None, kv_offset=None,
                           mode="train", window: int = 0, block_tables=None,
-                          write_mask=None):
+                          write_mask=None, q_lens=None):
     """Zamba2 backbone layer: Mamba2 mixer. (Paging kwargs unused: the
     recurrent state is O(1) per row.)"""
     h = L.rms_norm(x, p["ln"], cfg.norm_eps)

@@ -257,7 +257,8 @@ def stack_apply(cfg: ArchConfig, opts: ModelOptions, layer_params, x, *,
                 pos, mode: str = "train", cache=None, shared_params=None,
                 shared_cache=None, layer_mask=None, layer_offset=0,
                 kv_offset=None, window: int = 0, layer_param_fn=None,
-                inner_remat=None, block_tables=None, write_mask=None):
+                inner_remat=None, block_tables=None, write_mask=None,
+                q_lens=None):
     """Apply a contiguous slice of the layer stack.
 
     layer_params: pytree with leading local-layer axis (n_local, ...).
@@ -268,7 +269,8 @@ def stack_apply(cfg: ArchConfig, opts: ModelOptions, layer_params, x, *,
     ``layer_offset`` may be a traced scalar (stage_id * layers_per_stage).
     ``block_tables``/``write_mask`` switch append/decode attention to the
     paged cache layout (cache["layers"] then stacks per-layer block *pools*
-    with no batch axis — see ``blocks.paged_kv_update``).
+    with no batch axis — see ``blocks.paged_kv_update``); ``q_lens (b,)``
+    carries per-row real query counts for mixed ragged append waves.
     Returns (y, new_cache, aux_loss_sum).
     """
     n_local = jax.tree.leaves(layer_params)[0].shape[0]
@@ -295,7 +297,7 @@ def stack_apply(cfg: ArchConfig, opts: ModelOptions, layer_params, x, *,
             y, new_c, aux_i = block(cfg, opts, p_i, xc, pos=pos, cache=c_i,
                                     kv_offset=kv_offset, mode=mode,
                                     window=window, block_tables=block_tables,
-                                    write_mask=write_mask)
+                                    write_mask=write_mask, q_lens=q_lens)
             if shared_params is not None:
                 def run_shared(op):
                     y, shc = op

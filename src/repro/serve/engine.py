@@ -121,6 +121,7 @@ class ServeStats:
     ticks: int = 0
     calls: int = 0
     prefill_calls: int = 0  # append-mode pipeline calls (prefill waves)
+    mixed_calls: int = 0  # fused mixed-tick pipeline calls (prefill + decode)
     prefill_slot_ticks: int = 0  # (cell, round) pairs spent prefilling —
     # the per-request prefill-tick total (calls group concurrent cells, so
     # this is the measure a prefix-cache hit actually shrinks)
@@ -143,6 +144,7 @@ class ServeStats:
     swap_in_blocks: int = 0  # block payloads restored host -> device
     occupancy_samples: list = dataclasses.field(default_factory=list)
     decode_busy_samples: list = dataclasses.field(default_factory=list)
+    mixed_fill_samples: list = dataclasses.field(default_factory=list)
     block_usage_samples: list = dataclasses.field(default_factory=list)
     ttft_samples: list = dataclasses.field(default_factory=list)  # ticks
     tpot_samples: list = dataclasses.field(default_factory=list)  # ticks
@@ -162,6 +164,14 @@ class ServeStats:
         if not self.decode_busy_samples:
             return 0.0
         return float(np.mean(self.decode_busy_samples))
+
+    @property
+    def mixed_fill_ratio(self) -> float:
+        """Mean fraction of the mixed wave's padded (cell, qmax) token grid
+        carrying real tokens — how much of each fused call is useful work."""
+        if not self.mixed_fill_samples:
+            return 0.0
+        return float(np.mean(self.mixed_fill_samples))
 
     @property
     def tokens_per_s(self) -> float:
@@ -185,6 +195,9 @@ class ServeStats:
                "decode_occupancy": round(self.decode_occupancy, 4),
                "wall_s": round(self.wall_s, 4),
                "tokens_per_s": round(self.tokens_per_s, 2)}
+        if self.mixed_calls:
+            out["mixed_calls"] = self.mixed_calls
+            out["mixed_fill_ratio"] = round(self.mixed_fill_ratio, 4)
         if self.ttft_samples:
             out["ttft_p50"] = round(_pctl(self.ttft_samples, 50), 2)
             out["ttft_p95"] = round(_pctl(self.ttft_samples, 95), 2)
@@ -224,13 +237,21 @@ class ServeEngine:
     normalized to spatial-chunking off (the engine chunks *temporally*,
     across calls, so every microbatch slot owns one cache group).
     ``policy`` picks the per-arch admission order (fcfs / sjf / deadline).
+    ``fused`` folds each round's prefill waves and decode step into ONE
+    mixed-tick pipeline call (per-row ragged qlens); greedy tokens stay
+    bit-identical to the split schedule always, and per-request tick
+    latencies too on preemption-free schedules (under overcommit
+    retraction the atomic fused round preempts a wave row *before* its
+    chunk runs, where split preempts after — timing may interleave
+    differently, tokens never change).
     """
 
     def __init__(self, cfg: ArchConfig, eng: pl.EngineConfig, mesh, params,
                  opts: Optional[ModelOptions] = None,
                  overcommit: float = 1.0, policy: str = "fcfs",
                  prefix_cache: bool = False,
-                 host_blocks: Optional[int] = None, spill: bool = True):
+                 host_blocks: Optional[int] = None, spill: bool = True,
+                 fused: bool = False):
         if cfg.rope == "mrope" or cfg.frontend is not None:
             raise ValueError("continuous batching supports text-only archs; "
                              "use the static path for mrope/frontend models")
@@ -254,6 +275,16 @@ class ServeEngine:
             cfg, self.opts, self.eng, mesh, "decode", with_active=True)
         self.append_step = pl.make_serve_step(
             cfg, self.opts, self.eng, mesh, "append", with_active=True)
+        self.fused = bool(fused)
+        self.mixed_step = None
+        if self.fused:
+            if cfg.family in ("ssm", "hybrid") or cfg.hybrid is not None:
+                raise ValueError(
+                    "fused mixed-tick admission is attention-family only "
+                    "(ragged waves pad rows to the wave max and a recurrent "
+                    "state would advance through the padded positions)")
+            self.mixed_step = pl.make_serve_step(
+                cfg, self.opts, self.eng, mesh, "mixed", with_active=True)
         self.paged = bool(self.eng.paged)
         if self.opts.use_paged_kernel and not self.paged:
             raise ValueError("use_paged_kernel attends through block tables; "
@@ -357,11 +388,14 @@ class ServeEngine:
         if self.allocator is not None:
             self.stats.block_usage_samples.append(
                 self.allocator.used_blocks())
-        for qlen, slots in sorted(self.batcher.prefill_groups().items()):
-            self._prefill_call(qlen, slots)
-        dec = self.batcher.decode_slots()
-        if dec:
-            self._decode_call(dec)
+        if self.fused:
+            self._mixed_call()
+        else:
+            for qlen, slots in sorted(self.batcher.prefill_groups().items()):
+                self._prefill_call(qlen, slots)
+            dec = self.batcher.decode_slots()
+            if dec:
+                self._decode_call(dec)
         # belt-and-braces: nothing stays in flight across rounds (admission
         # swap-ins with no same-round compute call, e.g.)
         if self.transfer is not None and self.transfer.pending():
@@ -608,15 +642,20 @@ class ServeEngine:
                     self.stats.tokens_generated += 1
                 self._maybe_finish(s)
 
-    def _decode_call(self, slots) -> None:
+    def _decode_call(self, slots, sample: bool = True) -> int:
+        """One decode-mode pipeline call for ``slots``; returns the number of
+        rows that actually ran (pool stalls drop rows). ``sample=False``
+        suppresses the per-round occupancy sample (the fused path records one
+        combined sample covering the mixed call plus this tail call)."""
         slots = self._prepare(slots, 1)
         if self.transfer is not None:
             self.transfer.flush()
         if not slots:
             # a fully pool-stalled decode round is zero decode work, not a
             # skipped sample — keep the occupancy metric honest
-            self.stats.decode_busy_samples.append(0.0)
-            return
+            if sample:
+                self.stats.decode_busy_samples.append(0.0)
+            return 0
         if self.paged:
             self._assert_clean(slots, 1)
         tokens, positions, active = self._grid(1)
@@ -632,13 +671,110 @@ class ServeEngine:
         self.cache, tok, _ = self.decode_step(self.params, self.cache, batch)
         tok = np.asarray(tok)
         self.stats.calls += 1
-        self.stats.decode_busy_samples.append(
-            len(slots) / self.batcher.n_cells)
+        if sample:
+            self.stats.decode_busy_samples.append(
+                len(slots) / self.batcher.n_cells)
         for s in slots:
             s.pos += 1
             s.generated.append(int(tok[s.k, s.m, s.b]))
             self.stats.tokens_generated += 1
             self._maybe_finish(s)
+        return len(slots)
+
+    def _mixed_call(self) -> None:
+        """One fused mixed-tick pipeline call for the whole round: every
+        prefilling cell rides at its chunk width, every decoding cell at
+        qlen 1, idle cells at qlen 0 — one shared active mask, per-row
+        positions/kv offsets, rows padded to the wave max. Only rows whose
+        chunk completes the prompt (and the decode rows) sample a token.
+
+        Schedule parity with the split path is exact: slots are *prepared*
+        (block growth, retraction, CoW) in the split order — per sorted qlen
+        group then decode, each followed by a transfer flush — and a slot
+        that finishes its final chunk here also decodes once more this same
+        round via a tail decode call, mirroring the split schedule where
+        ``decode_slots()`` is taken after the prefill waves. Greedy tokens
+        and (preemption-free) per-request tick latencies are therefore
+        bit-identical; under retraction the atomic round preempts a wave
+        row before its chunk runs (split preempts after), so preemption
+        timing may differ — tokens still never change."""
+        pre = []
+        for qlen, slots in sorted(self.batcher.prefill_groups().items()):
+            ready = self._prepare(slots, qlen)
+            if self.transfer is not None:
+                self.transfer.flush()
+            pre.extend((s, qlen) for s in ready)
+        dec_all = self.batcher.decode_slots()
+        dec = self._prepare(dec_all, 1)
+        if self.transfer is not None:
+            self.transfer.flush()
+        # a later group's retraction may have victimized an earlier-prepared
+        # row — drop released slots before building the wave
+        pre = [(s, q) for s, q in pre if s.request is not None]
+        dec = [s for s in dec if s.request is not None]
+        if not pre and not dec:
+            if dec_all:
+                self.stats.decode_busy_samples.append(0.0)
+            return
+        if self.paged:
+            for s, q in pre:
+                self._assert_clean([s], q)
+            self._assert_clean(dec, 1)
+        qmax = max(q for _, q in pre) if pre else 1
+        tokens, positions, active = self._grid(qmax)
+        qlens = np.zeros((self.n_arches, self.eng.n_microbatches,
+                          self.mb_global), np.int32)
+        for s, q in pre:
+            tokens[s.k, s.m, s.b, :q] = s.chunks[0]
+            positions[s.k, s.m, s.b] = s.pos
+            qlens[s.k, s.m, s.b] = q
+            active[s.k, s.m, s.b] = True
+        for s in dec:
+            tokens[s.k, s.m, s.b, 0] = s.generated[-1]
+            positions[s.k, s.m, s.b] = s.pos
+            qlens[s.k, s.m, s.b] = 1
+            active[s.k, s.m, s.b] = True
+        batch = {"tokens": jnp.asarray(tokens),
+                 "positions": jnp.asarray(positions),
+                 "qlens": jnp.asarray(qlens),
+                 "active": jnp.asarray(active)}
+        if self.paged:
+            batch["block_tables"] = jnp.asarray(
+                self._block_tables([s for s, _ in pre] + dec))
+        self.cache, tok, _ = self.mixed_step(self.params, self.cache, batch)
+        tok = np.asarray(tok)
+        self.stats.calls += 1
+        self.stats.mixed_calls += 1
+        self.stats.prefill_slot_ticks += len(pre)
+        self.stats.mixed_fill_samples.append(
+            float(qlens.sum()) / (self.batcher.n_cells * qmax))
+        tail = []  # final-chunk completions decode again this round
+        for s, q in pre:
+            s.chunks.pop(0)
+            s.pos += q
+            if not s.chunks:
+                t = int(tok[s.k, s.m, s.b])
+                if s.resume_tokens is not None:
+                    assert t == s.resume_tokens[-1], \
+                        "recompute replay diverged from retracted tokens"
+                    s.generated = list(s.resume_tokens)
+                    s.resume_tokens = None
+                else:  # final chunk → first generated token
+                    s.generated.append(t)
+                    s.first_token_tick = self.tick
+                    self.stats.tokens_generated += 1
+                self._maybe_finish(s)
+                if s.request is not None:
+                    tail.append(s)
+        for s in dec:
+            s.pos += 1
+            s.generated.append(int(tok[s.k, s.m, s.b]))
+            self.stats.tokens_generated += 1
+            self._maybe_finish(s)
+        ran = self._decode_call(tail, sample=False) if tail else 0
+        if dec_all or tail:
+            self.stats.decode_busy_samples.append(
+                (len(dec) + ran) / self.batcher.n_cells)
 
     def _maybe_finish(self, slot) -> None:
         if not slot.finished:

@@ -72,6 +72,36 @@ def test_kernel_vs_ref(variant, b, sq, hq, hkv, hd, nb, bs, n_tbl, kv_lens,
     assert err < tol, err
 
 
+@pytest.mark.parametrize("variant", ["loop", "blockspec"])
+@pytest.mark.parametrize("q_lens", [[4, 1], [3, 0], [1, 4]])
+def test_kernel_ragged_q_lens(variant, q_lens):
+    """Mixed-tick waves: rows carry ragged per-row query counts (chunk
+    width prefilling, 1 decoding, 0 idle) padded to the wave max. Padded
+    query positions must come out exactly zero and real positions must
+    match the reference attending only kv_offset + q_len_r tokens."""
+    b, sq, hq, hkv, hd, nb, bs, n_tbl = 2, 4, 4, 2, 16, 14, 4, 5
+    kv_off = [7, 9]
+    kv_lens = [o + q for o, q in zip(kv_off, q_lens)]
+    # capacity must cover each row's real tokens; build at the padded tail
+    case = make_paged_case(b, sq, hq, hkv, hd, nb, bs, n_tbl,
+                           [o + sq for o in kv_off], jnp.float32)
+    q, k_pool, v_pool, tables, _, _ = case
+    kv_offset = jnp.asarray(kv_off, jnp.int32)
+    kv_len = jnp.asarray(kv_lens, jnp.int32)
+    ql = jnp.asarray(q_lens, jnp.int32)
+    r = ref.paged_attention_ref(q, k_pool, v_pool, tables, kv_offset, kv_len,
+                                causal=True, window=0, q_lens=ql)
+    o = pa.paged_attention_pool(q, k_pool, v_pool, tables, kv_offset, kv_len,
+                                causal=True, window=0, interpret=True,
+                                variant=variant, q_lens=ql)
+    err = float(jnp.max(jnp.abs(r - o)))
+    assert err < 2e-5, err
+    # padded rows really are zeros (a fully-masked row never contributes)
+    on = np.asarray(o)
+    for row, n in enumerate(q_lens):
+        np.testing.assert_array_equal(on[row, n:], 0.0)
+
+
 def test_kernel_vs_gathered_dense():
     """The pool path must equal plain masked attention over each row's
     gathered logical view — the end-to-end gather-path equivalence."""
@@ -219,6 +249,32 @@ def test_engine_kernel_matches_gather_and_oracle(monkeypatch, lowering):
         assert b.tokens == oracle_tokens(cfg, ModelOptions(), params, r), \
             f"request {r.rid}: kernel diverged from the oracle"
     assert e_k.allocator.all_free()
+    ops.paged_attention.clear_cache()
+
+
+@pytest.mark.parametrize("lowering", ["jnp", "interpret"])
+def test_engine_fused_kernel_matches_split(monkeypatch, lowering):
+    """Fused mixed-tick admission through the paged-attention kernel: the
+    per-row q-length masking must keep greedy tokens and tick latencies
+    bit-identical to the split schedule on the same lowering."""
+    monkeypatch.setenv("REPRO_PAGED_ATTN", lowering)
+    ops.paged_attention.clear_cache()
+    cfg, mesh, eng, params = _engine_build()
+    rng = np.random.default_rng(3)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size, (p,)).astype(np.int32),
+                    g, arrival=0.5 * i)
+            for i, (p, g) in enumerate([(9, 4), (12, 3), (7, 5), (5, 2)])]
+    opts = ModelOptions(use_paged_kernel=True)
+    e_s = ServeEngine(cfg, eng, mesh, params, opts)
+    comp_s = e_s.run([r.clone() for r in reqs])
+    e_f = ServeEngine(cfg, eng, mesh, params, opts, fused=True)
+    comp_f = e_f.run([r.clone() for r in reqs])
+    for a, b in zip(comp_s, comp_f):
+        assert a.tokens == b.tokens, f"request {a.rid}: fused != split"
+        assert a.ttft_ticks == b.ttft_ticks
+        assert a.finished_tick == b.finished_tick
+    assert e_f.stats.calls < e_s.stats.calls
+    assert e_f.allocator.all_free()
     ops.paged_attention.clear_cache()
 
 
