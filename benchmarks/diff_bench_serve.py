@@ -11,13 +11,19 @@ runs (the run overwrites it in the workspace when green), then calls
 Gated metrics are the serve throughput numbers — ``tokens_per_s*`` /
 ``tokens_per_tick*`` (higher is better) and ``us_per_call`` (lower is
 better). Any gated metric moving more than ``--threshold`` (default 15%)
-in the bad direction fails the diff with exit 1. Everything else in the
-trajectory is informational. A before/after markdown table is appended to
-``$GITHUB_STEP_SUMMARY`` when that variable is set (or ``--summary PATH``).
+in the bad direction fails the diff with exit 1. Gated metrics present
+only in the fresh file (a bench row added by the PR under test) are
+reported as ``NEW`` and never fail — a growing suite must not be walled
+out by its own baseline. ``acceptance_rate`` entries are tracked as
+``INFO`` (drafter quality context for the speculation row, not a gate).
+Everything else in the trajectory is informational. A before/after
+markdown table is appended to ``$GITHUB_STEP_SUMMARY`` when that variable
+is set (or ``--summary PATH``).
 
 ``--self-test`` exercises the wall itself: a synthetic 20% throughput drop
-must fail and an unchanged trajectory must pass, so a broken comparator
-can never rubber-stamp a real regression.
+must fail, an unchanged trajectory must pass, and fresh-only rows must
+surface as NEW without failing, so a broken comparator can never
+rubber-stamp a real regression.
 """
 import argparse
 import json
@@ -33,6 +39,10 @@ GATED = (
     ("tokens_per_tick", True),
     ("us_per_call", False),
 )
+
+# reported alongside the gated metrics for context, never gated (drafter
+# quality moves the speculation row's acceptance, not its correctness)
+INFO = ("acceptance_rate",)
 
 
 def gated_direction(metric):
@@ -50,22 +60,34 @@ def load(path):
 
 def diff(base, fresh, threshold=DEFAULT_THRESHOLD):
     """Compare two flat trajectories. Returns (entries, failures): entries
-    are (row, metric, before, after, delta_frac, gated, regressed) for every
-    gated metric present in both files; failures is the regressed subset."""
+    are (row, metric, before, after, delta_frac, flag) for every gated or
+    INFO metric present in the fresh file — flag is "" (within the wall),
+    "REGRESSED" (gated move past the threshold in the bad direction), "NEW"
+    (absent from the baseline: reported, never failed), or "INFO" (tracked
+    for context, never gated). failures is the REGRESSED subset."""
     entries = []
-    for key in sorted(set(base) & set(fresh)):
+    for key in sorted(fresh):
         row, metric = key
         higher_is_better = gated_direction(metric)
-        if higher_is_better is None:
+        info = any(sub in metric for sub in INFO)
+        if higher_is_better is None and not info:
             continue
-        before, after = base[key], fresh[key]
+        after = fresh[key]
+        if key not in base:
+            entries.append((row, metric, None, after, None, "NEW"))
+            continue
+        before = base[key]
         if before == 0:
             continue  # no meaningful relative delta
         delta = (after - before) / abs(before)
-        regressed = (delta < -threshold if higher_is_better
-                     else delta > threshold)
-        entries.append((row, metric, before, after, delta, regressed))
-    failures = [e for e in entries if e[5]]
+        if info or higher_is_better is None:
+            flag = "INFO"
+        else:
+            regressed = (delta < -threshold if higher_is_better
+                         else delta > threshold)
+            flag = "REGRESSED" if regressed else ""
+        entries.append((row, metric, before, after, delta, flag))
+    failures = [e for e in entries if e[5] == "REGRESSED"]
     return entries, failures
 
 
@@ -77,15 +99,17 @@ def render_markdown(entries, failures, threshold):
              "",
              "| row | metric | baseline | fresh | delta | |",
              "|---|---|---:|---:|---:|---|"]
-    for row, metric, before, after, delta, regressed in entries:
-        flag = "REGRESSED" if regressed else ""
-        lines.append(f"| {row} | {metric} | {before:g} | {after:g} "
-                     f"| {delta:+.1%} | {flag} |")
+    for row, metric, before, after, delta, flag in entries:
+        b = "—" if before is None else f"{before:g}"
+        dl = "—" if delta is None else f"{delta:+.1%}"
+        lines.append(f"| {row} | {metric} | {b} | {after:g} | {dl} "
+                     f"| {flag} |")
     return "\n".join(lines) + "\n"
 
 
 def self_test():
-    """The wall must catch a synthetic 20% drop and pass a clean rerun."""
+    """The wall must catch a synthetic 20% drop, pass a clean rerun, and
+    report fresh-only rows as NEW without failing."""
     base = {
         ("serve/x", "tokens_per_s_fused"): 100.0,
         ("serve/x", "us_per_call"): 50.0,
@@ -109,7 +133,26 @@ def self_test():
     within[("serve/x", "tokens_per_s_fused")] = 90.0  # -10%: inside the wall
     _, failures = diff(base, within)
     assert not failures, f"10% drop wrongly flagged: {failures}"
-    print("self-test passed: 20% drops fail, <=15% noise and reruns pass")
+    # a bench row added by the PR under test: its gated metrics have no
+    # baseline — they must surface as NEW, never fail the wall
+    grown = dict(base)
+    grown[("serve/spec_decode", "us_per_call")] = 400.0
+    grown[("serve/spec_decode", "acceptance_rate")] = 1.0
+    entries, failures = diff(base, grown)
+    assert not failures, f"fresh-only row failed the wall: {failures}"
+    new = {(e[0], e[1]): e[5] for e in entries if e[5] == "NEW"}
+    assert new == {("serve/spec_decode", "us_per_call"): "NEW",
+                   ("serve/spec_decode", "acceptance_rate"): "NEW"}, \
+        f"fresh-only metrics not reported as NEW: {entries}"
+    # acceptance_rate present in BOTH files: tracked as INFO, never gated
+    moved = dict(grown)
+    moved[("serve/spec_decode", "acceptance_rate")] = 0.4  # -60%: still ok
+    entries, failures = diff(grown, moved)
+    assert not failures, f"INFO metric failed the wall: {failures}"
+    assert [e[5] for e in entries
+            if e[1] == "acceptance_rate"] == ["INFO"], entries
+    print("self-test passed: 20% drops fail, <=15% noise and reruns pass, "
+          "fresh-only rows report NEW, acceptance_rate stays INFO")
 
 
 def main():
@@ -139,10 +182,11 @@ def main():
     if args.summary:
         with open(args.summary, "a") as f:
             f.write(md + "\n")
-    for row, metric, before, after, delta, regressed in entries:
-        mark = " <-- REGRESSED" if regressed else ""
-        print(f"{row:40s} {metric:32s} {before:>12g} -> {after:>12g} "
-              f"({delta:+.1%}){mark}")
+    for row, metric, before, after, delta, flag in entries:
+        b = "           —" if before is None else f"{before:>12g}"
+        dl = "    —" if delta is None else f"{delta:+.1%}"
+        mark = f" <-- {flag}" if flag else ""
+        print(f"{row:40s} {metric:32s} {b} -> {after:>12g} ({dl}){mark}")
     if not entries:
         print("no gated metrics in common — nothing to compare",
               file=sys.stderr)

@@ -30,6 +30,9 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _UNITS = (
     ("us_per_call", "us/call"),
     ("tokens_per_s", "tok/s"),
+    ("tokens_per_tick", "tok/tick"),
+    ("ticks_per_token", "ticks/token"),
+    ("acceptance_rate", "fraction"),
     ("ttft", "ticks"),
     ("tpot", "ticks/token"),
     ("wall_s", "s"),

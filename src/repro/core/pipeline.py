@@ -284,21 +284,31 @@ def vp_loss(cfg: ArchConfig, eng: EngineConfig, norm_p, head_local, y,
     return nll.mean()
 
 
-def vp_greedy_token(cfg: ArchConfig, eng: EngineConfig, norm_p, head_local,
-                    y):
-    """Vocab-parallel greedy sampling of the next token. y (b, 1, D)."""
+def vp_greedy_tokens(cfg: ArchConfig, eng: EngineConfig, norm_p, head_local,
+                     y):
+    """Vocab-parallel greedy argmax at EVERY position. y (b, s, D) ->
+    ((b, s) int32 winners, (b, s) float32 max logits). The per-position math
+    is identical to :func:`vp_greedy_token` — speculative verify relies on
+    position i of an s-wide call matching a 1-wide call at that depth."""
     s_idx, _ = _stage_info(eng)
     x = lm.final_norm_apply(cfg, norm_p, y)
     logits = jnp.einsum("bsd,dv->bsv", x, head_local).astype(jnp.float32)
     v_s = logits.shape[-1]
     gid = s_idx * v_s + jnp.arange(v_s)
     logits = jnp.where(gid < cfg.vocab_size, logits, -1e30)
-    lmax = jnp.max(logits, axis=-1)  # (b, 1)
+    lmax = jnp.max(logits, axis=-1)  # (b, s)
     larg = jnp.argmax(logits, axis=-1) + s_idx * v_s
     gmax = lax.pmax(lmax, eng.stage_axis)
     winner = lax.psum(jnp.where(lmax >= gmax, larg, 0), eng.stage_axis)
     count = lax.psum((lmax >= gmax).astype(jnp.int32), eng.stage_axis)
-    return (winner // jnp.maximum(count, 1))[:, 0], gmax[:, 0]  # (b,), (b,)
+    return winner // jnp.maximum(count, 1), gmax  # (b, s), (b, s)
+
+
+def vp_greedy_token(cfg: ArchConfig, eng: EngineConfig, norm_p, head_local,
+                    y):
+    """Vocab-parallel greedy sampling of the next token. y (b, 1, D)."""
+    tok, gmax = vp_greedy_tokens(cfg, eng, norm_p, head_local, y)
+    return tok[:, 0], gmax[:, 0]  # (b,), (b,)
 
 
 def plain_loss(cfg, eng, norm_p, head_full, y, labels):
@@ -726,6 +736,14 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
     wave padded to the wave max. Padded positions are never written to the
     cache and attend to nothing; the head samples each row at its own last
     real position (qlens - 1) instead of the trailing column.
+    verify: mixed's ragged-append semantics with a per-POSITION head readout
+    — ``tokens_out``/``logit_max`` come back (K,M,mb,qlen), holding each
+    row's greedy argmax at every query position instead of only the last.
+    Position i's token is what decode at that depth would emit (same key
+    set, masked scores contribute exactly 0), which is the speculative-
+    decoding contract: the target verifies a drafter's gamma proposals plus
+    its own bonus token in one call. Outputs at positions >= a row's qlens
+    are garbage (clamped padding) — callers slice by qlens.
     All modes accept an optional ``batch["active"]`` (K,M,mb) bool row mask:
     inactive rows compute (SPMD shapes are static) but their cache rows are
     left untouched, so idle slots can ride along in a live batch.
@@ -736,9 +754,9 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
     cache footprint is the pool, not slots × max_seq.
     Returns (new_cache, tokens_out (K,M,mb), logit_max (K,M,mb)).
     """
-    if eng.paged and mode not in ("append", "decode", "mixed"):
-        raise ValueError(f"paged serving supports append/decode/mixed only, "
-                         f"got mode={mode!r}")
+    if eng.paged and mode not in ("append", "decode", "mixed", "verify"):
+        raise ValueError(f"paged serving supports append/decode/mixed/verify "
+                         f"only, got mode={mode!r}")
     S = eng.n_stages
     K, M = eng.n_trials, eng.n_microbatches
     plan = plan_stages(cfg, S)
@@ -754,10 +772,10 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
     cdt = opts.compute_dtype
     nc = eng.prefill_chunks if (mode == "prefill"
                                 and eng.prefill_chunks > 1) else 1
-    stack_mode = ("append" if (nc > 1 or mode in ("append", "mixed"))
-                  else mode)
+    ragged = mode in ("append", "mixed", "verify")
+    stack_mode = "append" if (nc > 1 or ragged) else mode
     active = batch.get("active")
-    qlens = batch.get("qlens") if mode == "mixed" else None
+    qlens = batch.get("qlens") if mode in ("mixed", "verify") else None
 
     def chunk_of(m):
         return m % nc if nc > 1 else jnp.zeros((), jnp.int32)
@@ -772,7 +790,7 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
         tok = _take2({"t": tokens}, k, m)["t"]
         if mode == "decode":
             pos = _take2({"p": batch["positions"]}, k, m)["p"][:, None]
-        elif mode in ("append", "mixed"):
+        elif ragged:
             pos = slot_pos(slot)  # (mb, qlen) per-row absolute positions
         else:
             pos = chunk_of(m) * qlen + jnp.broadcast_to(
@@ -794,7 +812,7 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
             if cfg.rope == "mrope":
                 return jnp.broadcast_to(p, (3, mb, 1))
             return p
-        if mode in ("append", "mixed"):
+        if ragged:
             start = _take2({"p": batch["positions"]}, k, m)["p"]
             pos = start[:, None] + jnp.arange(qlen)[None, :]
             if qlens is not None:
@@ -868,7 +886,7 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
             shared = (_take1(params["shared"], k_cur)
                       if "shared" in params else None)
             kv_off = None
-            if mode in ("decode", "append", "mixed"):
+            if mode == "decode" or ragged:
                 kv_off = _take2({"p": batch["positions"]}, k_cur, m_cur)["p"]
             elif nc > 1:
                 kv_off = jnp.full((mb,), chunk_of(m_cur) * qlen, jnp.int32)
@@ -919,38 +937,54 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
         slot_out = t - (S - 1)
         valid_out = (slot_out >= 0) & (slot_out < eng.n_slots)
         k_out, m_out = _slot_ids(eng, slot_out)
-        if qlens is not None:
-            # mixed ragged wave: each row's chunk ends at its own qlens - 1,
-            # not the padded trailing column
-            ql_out = _take2({"q": qlens}, k_out, m_out)["q"]
-            sel = jnp.clip(ql_out - 1, 0, qlen - 1)[:, None, None]
-            y_head = jnp.take_along_axis(y, sel, axis=1)
-        else:
-            y_head = y[:, -1:]
-        y_last = lax.psum(jnp.where(s_idx == S - 1, y_head, 0.0),
-                          eng.stage_axis)
         norm_k = _take1({"n": params["final_norm"]}, k_out)["n"]
         head_k = _take1({"h": params["head"]}, k_out)["h"]
-        if eng.vocab_parallel:
-            nxt, lmax = vp_greedy_token(cfg, eng, norm_k, head_k, y_last)
+        if mode == "verify":
+            # speculative verify: greedy argmax at EVERY query position —
+            # the drafter's proposals and the target's bonus token are all
+            # judged from one call (outputs past a row's qlens are clamped
+            # padding; the engine slices by qlens)
+            y_all = lax.psum(jnp.where(s_idx == S - 1, y, 0.0),
+                             eng.stage_axis)
+            if eng.vocab_parallel:
+                nxt, lmax = vp_greedy_tokens(cfg, eng, norm_k, head_k, y_all)
+            else:
+                x_h = lm.final_norm_apply(cfg, norm_k, y_all)
+                logits = jnp.einsum("bsd,dv->bsv", x_h, head_k)
+                nxt, lmax = jnp.argmax(logits, -1), jnp.max(logits, -1)
+            idx4 = (k_out, m_out, 0, 0)
         else:
-            x_h = lm.final_norm_apply(cfg, norm_k, y_last)
-            logits = jnp.einsum("bsd,dv->bsv", x_h, head_k)[:, 0]
-            nxt, lmax = jnp.argmax(logits, -1), jnp.max(logits, -1)
+            if qlens is not None:
+                # mixed ragged wave: each row's chunk ends at its own
+                # qlens - 1, not the padded trailing column
+                ql_out = _take2({"q": qlens}, k_out, m_out)["q"]
+                sel = jnp.clip(ql_out - 1, 0, qlen - 1)[:, None, None]
+                y_head = jnp.take_along_axis(y, sel, axis=1)
+            else:
+                y_head = y[:, -1:]
+            y_last = lax.psum(jnp.where(s_idx == S - 1, y_head, 0.0),
+                              eng.stage_axis)
+            if eng.vocab_parallel:
+                nxt, lmax = vp_greedy_token(cfg, eng, norm_k, head_k, y_last)
+            else:
+                x_h = lm.final_norm_apply(cfg, norm_k, y_last)
+                logits = jnp.einsum("bsd,dv->bsv", x_h, head_k)[:, 0]
+                nxt, lmax = jnp.argmax(logits, -1), jnp.max(logits, -1)
+            idx4 = (k_out, m_out, 0)
         upd_tok = jnp.where(valid_out, nxt.astype(jnp.int32),
                             lax.dynamic_index_in_dim(
                                 lax.dynamic_index_in_dim(
                                     tok_out, k_out, 0, False), m_out, 0,
                                 False))
         tok_out = lax.dynamic_update_slice(
-            tok_out, upd_tok[None, None], (k_out, m_out, 0))
+            tok_out, upd_tok[None, None], idx4)
         upd_val = jnp.where(valid_out, lmax.astype(jnp.float32),
                             lax.dynamic_index_in_dim(
                                 lax.dynamic_index_in_dim(
                                     val_out, k_out, 0, False), m_out, 0,
                                 False))
         val_out = lax.dynamic_update_slice(
-            val_out, upd_val[None, None], (k_out, m_out, 0))
+            val_out, upd_val[None, None], idx4)
         if S > 1:
             perm = [(i, (i + 1) % S) for i in range(S)]
             x_next = lax.ppermute(y, eng.stage_axis, perm)
@@ -959,8 +993,9 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
         return (x_next, cache, tok_out, val_out), None
 
     x0 = jnp.zeros((mb, qlen, cfg.d_model), cdt)
-    tok0 = jnp.zeros((K, M, mb), jnp.int32)
-    val0 = jnp.zeros((K, M, mb), jnp.float32)
+    out_shape = (K, M, mb, qlen) if mode == "verify" else (K, M, mb)
+    tok0 = jnp.zeros(out_shape, jnp.int32)
+    val0 = jnp.zeros(out_shape, jnp.float32)
     (xf, cache, tok_out, val_out), _ = lax.scan(
         tick, (x0, cache, tok0, val0), jnp.arange(eng.n_ticks))
     return cache, tok_out, val_out
@@ -971,25 +1006,27 @@ def make_serve_step(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
                     with_active: bool = False) -> Callable:
     """Builds the jitted pipelined serving step.
 
-    ``mode``: prefill | decode | append | mixed. ``append`` is the
+    ``mode``: prefill | decode | append | mixed | verify. ``append`` is the
     continuous-batching admission step: qlen tokens per row inserted at
     per-row cache depths (batch carries ``positions`` start offsets).
     ``mixed`` is the fused-admission tick: append semantics plus a (K,M,mb)
     int32 ``qlens`` batch entry giving each row's real query count (chunk
     width / 1 for decode / 0 for idle), so one program advances prefill and
-    decode rows together. ``with_active=True`` adds a
+    decode rows together. ``verify`` is the speculative-decoding target
+    call: mixed's ragged append with a per-position head readout — tokens
+    and logit_max come back (K,M,mb,qlen). ``with_active=True`` adds a
     (K,M,mb) bool ``active`` row mask to the batch: inactive rows never touch
     their cache (the serve engine uses it to let idle/decoding slots ride
     along during admission and vice versa).
     Returns fn(params, cache, batch) -> (new_cache, tokens, logit_max).
     """
-    if mode in ("append", "mixed") and cfg.rope == "mrope":
+    if mode in ("append", "mixed", "verify") and cfg.rope == "mrope":
         raise ValueError("append mode (continuous batching) does not support "
                          "mrope archs; use the static prefill path")
-    if mode == "mixed" and cfg.family in ("ssm", "hybrid"):
-        raise ValueError("mixed-tick serving is attention-family only: "
-                         "ragged padded tokens would advance recurrent "
-                         "SSM state")
+    if mode in ("mixed", "verify") and cfg.family in ("ssm", "hybrid"):
+        raise ValueError("mixed-tick/verify serving is attention-family "
+                         "only: ragged padded tokens would advance "
+                         "recurrent SSM state")
     pspecs = param_pspecs(cfg, eng)
     bspecs = batch_pspecs(cfg, eng, train=False)
     if mode == "prefill":
@@ -998,7 +1035,7 @@ def make_serve_step(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
         # the cache (written by a static prefill)
         bspecs.pop("frontend_embeds", None)
         bspecs.pop("mrope_pos", None)
-    if mode == "mixed":
+    if mode in ("mixed", "verify"):
         bspecs["qlens"] = P(None, None,
                             None if eng.batch_replicated else eng.dp_axes)
     if with_active:
@@ -1010,7 +1047,11 @@ def make_serve_step(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
         bspecs["block_tables"] = P(
             None, None, None if eng.batch_replicated else eng.dp_axes, None)
     cspecs = serve_cache_pspecs(cfg, eng)
-    batch_ax = P() if eng.batch_replicated else P(None, None, eng.dp_axes)
+    if mode == "verify":  # per-position outputs carry a trailing qlen axis
+        batch_ax = (P() if eng.batch_replicated
+                    else P(None, None, eng.dp_axes, None))
+    else:
+        batch_ax = P() if eng.batch_replicated else P(None, None, eng.dp_axes)
 
     def inner(params, cache, batch):
         return pipeline_serve(cfg, opts, eng, params, cache, batch, mode)

@@ -155,6 +155,18 @@ def build_args():
     ap.add_argument("--expected-hit-rate", type=float, default=0.0,
                     help="expected prefix-cache hit fraction for paged "
                     "capacity planning (shrinks per-row expected demand)")
+    ap.add_argument("--spec-draft", default="",
+                    help="gang-speculative decoding: pair every target arch "
+                    "with a drafter trial row holding THIS ArchConfig's "
+                    "weights (must share the target's parameter skeleton and "
+                    "vocab — heterogeneous drafter archs need ragged param "
+                    "packing, see ROADMAP). Drafter rows autoregressively "
+                    "propose --spec-gamma tokens; the target verifies them "
+                    "in one append-mode call. Greedy tokens stay "
+                    "bit-identical; drafter quality only moves the "
+                    "acceptance rate")
+    ap.add_argument("--spec-gamma", type=int, default=3,
+                    help="draft tokens proposed per speculation round")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 
@@ -195,6 +207,14 @@ def main():
     if args.fused_admission and args.static:
         raise SystemExit("--fused-admission fuses the continuous engine's "
                          "round; drop --static")
+    if args.spec_draft and args.static:
+        raise SystemExit("--spec-draft speculates inside the continuous "
+                         "engine's rounds; drop --static")
+    if args.spec_draft and args.fused_admission:
+        raise SystemExit("--spec-draft and --fused-admission both own the "
+                         "round's ragged call structure; pick one")
+    if args.spec_draft and args.spec_gamma < 1:
+        raise SystemExit(f"--spec-gamma must be >= 1, got {args.spec_gamma}")
     weights = parse_weights(args.arch_weights, args.arches)
     mesh = make_test_mesh(args.n_data, args.n_model)
     cfg = get_config(args.arch)
@@ -243,6 +263,32 @@ def main():
         base = dataclasses.replace(base, n_blocks=n_blocks,
                                    host_blocks=args.host_blocks)
     eng = base
+    spec_pairs = None
+    if args.spec_draft:
+        dcfg = get_config(args.spec_draft)
+        if args.smoke:
+            dcfg = dcfg.reduced()
+        # drafter rows ride the same stacked param pytree (leading K axis),
+        # so the drafter arch must share the target's parameter skeleton —
+        # heterogeneous drafter archs need ragged param packing (ROADMAP)
+        e1 = dataclasses.replace(eng, n_trials=1)
+
+        def skeleton(c):
+            shapes = jax.eval_shape(lambda: pl.init_trial_params(
+                c, e1, plan_stages(c, eng.n_stages), jax.random.PRNGKey(0),
+                max_pos=max_seq))
+            return jax.tree.map(lambda x: (x.shape, x.dtype), shapes)
+
+        if dcfg.vocab_size != cfg.vocab_size or skeleton(dcfg) != skeleton(cfg):
+            raise SystemExit(
+                f"--spec-draft {args.spec_draft}: drafter parameter skeleton "
+                f"(or vocab) differs from {args.arch} — the trial axis "
+                f"stacks rows of one shape, so a smaller drafter arch needs "
+                f"ragged per-row param packing (tracked in ROADMAP.md); "
+                f"pick an arch variant with an identical skeleton")
+        # drafter rows mirror the target rows: target k drafts on row K + k
+        spec_pairs = {k: args.arches + k for k in range(args.arches)}
+        eng = dataclasses.replace(eng, n_trials=2 * args.arches)
 
     if args.trace:
         requests = load_trace(args.trace)
@@ -295,7 +341,9 @@ def main():
                              overcommit=args.overcommit, policy=args.policy,
                              prefix_cache=args.prefix_cache,
                              spill=not args.no_spill,
-                             fused=args.fused_admission)
+                             fused=args.fused_admission,
+                             spec_gamma=args.spec_gamma if args.spec_draft
+                             else 0, spec_pairs=spec_pairs)
         completions = engine.run(requests)
         stats = engine.stats
         mode = "continuous/paged" if args.paged else "continuous"
@@ -303,6 +351,8 @@ def main():
             mode += "+kernel"
         if args.fused_admission:
             mode += "+fused"
+        if args.spec_draft:
+            mode += f"+spec(gamma={args.spec_gamma})"
         if args.prefix_cache:
             mode += "+prefix-cache"
         if args.arches > 1:
@@ -341,6 +391,19 @@ def main():
                   f"{s.get('swap_out_blocks', 0)} blocks swapped out, "
                   f"{s.get('swap_in_blocks', 0)} swapped in "
                   f"(host tier {eng.host_blocks} blocks/partition)")
+    if args.spec_draft and not args.static:
+        sp = engine.spec_stats.summary()
+        ticks_base = s["calls"] / max(s["tokens_generated"], 1)
+        ticks_spec = ((s["prefill_calls"] + sp["spec_verify_calls"])
+                      / max(s["tokens_generated"], 1))
+        print(f"speculation: {sp['spec_accepted']}/{sp['spec_proposed']} "
+              f"drafts accepted (rate {sp['acceptance_rate']}), "
+              f"{sp['spec_bonus_tokens']} bonus tokens, "
+              f"{sp['spec_draft_calls']} draft calls / "
+              f"{sp['spec_verify_calls']} verify calls, "
+              f"{sp['spec_rollback_blocks']} blocks rolled back; "
+              f"target ticks/token {ticks_spec:.3f} "
+              f"(vs {ticks_base:.3f} counting drafter ticks)")
     if args.prefix_cache:
         print(f"prefix cache: {s.get('prefix_hits', 0)} hits "
               f"({s.get('prefix_hit_tokens', 0)} tokens, "

@@ -13,7 +13,12 @@ from repro.serve.batcher import (  # noqa: F401
     ResumeState,
     Slot,
 )
-from repro.serve.engine import ServeEngine, ServeStats, static_serve  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    ServeEngine,
+    ServeStats,
+    SpecStats,
+    static_serve,
+)
 from repro.serve.paging import (  # noqa: F401
     BlockAllocator,
     BlockTable,

@@ -31,6 +31,17 @@ slots (shared residency is charged exactly once; unreferenced cached blocks
 are evictable and never charged). Host-resident (spilled) matched nodes are
 charged one fresh block each — their restore allocates from the pool.
 
+Gang speculation (``spec_pairs``): target trial row k is paired with drafter
+row ``spec_pairs[k]``. Admitting a request to a target cell (k, m, b) also
+claims the *mirror* drafter cell (spec_pairs[k], m, b) — same request, own
+block table in the drafter row's partition — so a request is only admitted
+when BOTH its target commitment and its drafter commitment fit
+(:meth:`_attach_draft`). Drafter cells never admit requests of their own
+(their rows are reserved), never prefill (their cache is built by catch-up
+appends from the committed stream), and are excluded from
+:meth:`decode_slots` (the engine drives them through its draft calls). The
+pair lives and dies atomically: completion and retraction release both cells.
+
 Retraction (overcommit > 1): the engine may :meth:`Batcher.requeue` a
 running request it preempted under pool exhaustion, together with a
 :class:`ResumeState` continuation. The request re-enters the *head* of its
@@ -76,6 +87,8 @@ class Slot:
     resume_tokens: Optional[list] = None  # recompute-restore: the tokens
     # generated before retraction; the teacher-forced replay re-derives them
     # (asserted bit-identical) instead of re-sampling
+    is_draft: bool = False  # gang speculation: this cell drafts for ``peer``
+    peer: Optional["Slot"] = None  # paired drafter/target mirror cell
 
     @property
     def free(self) -> bool:
@@ -109,6 +122,8 @@ class Slot:
         self.hit_tokens = 0
         self.resumed = False
         self.resume_tokens = None
+        self.is_draft = False
+        self.peer = None
 
 
 @dataclasses.dataclass
@@ -158,13 +173,15 @@ class Batcher:
                  allocator: Optional[BlockAllocator] = None,
                  rows_per_partition: int = 0, overcommit: float = 1.0,
                  policy: str = "fcfs", prefix_cache=None, store=None,
-                 transfer=None):
+                 transfer=None, spec_pairs=None):
         if policy not in POLICIES:
             raise ValueError(f"unknown admission policy {policy!r} "
                              f"(choose from {POLICIES})")
         if prefix_cache is not None and allocator is None:
             raise ValueError("prefix_cache requires a paged BlockAllocator")
         self.n_trials = n_trials
+        self.spec_pairs = dict(spec_pairs or {})  # target row -> drafter row
+        self.draft_rows = set(self.spec_pairs.values())
         self.prefix_cache = prefix_cache
         # the tiered store routes allocation-pressure reclamation; a cache
         # always carries one (legacy wiring), otherwise it may be passed
@@ -224,11 +241,19 @@ class Batcher:
 
     # -- queue ---------------------------------------------------------------
 
+    def cell(self, k: int, m: int, b: int) -> Slot:
+        """The Slot at grid coordinate (k, m, b)."""
+        return self.slots[(k * self.n_microbatches + m) * self.mb_global + b]
+
     def enqueue(self, req: Request) -> None:
         if req.arch >= self.n_trials:
             raise ValueError(
                 f"request {req.rid}: arch={req.arch} but this gang co-serves "
                 f"{self.n_trials} variant(s) (trial rows 0..{self.n_trials - 1})")
+        if req.arch in self.draft_rows:
+            raise ValueError(
+                f"request {req.rid}: arch={req.arch} is a drafter row "
+                f"(reserved for gang speculation); address a target row")
         if req.total_len > self.max_seq:
             raise ValueError(
                 f"request {req.rid}: prompt_len + max_new_tokens - 1 = "
@@ -313,7 +338,15 @@ class Batcher:
         """
         admitted = []
         for k in range(self.n_trials):
+            if k in self.draft_rows:
+                continue  # reserved: drafter cells fill via _attach_draft
             free = [s for s in self.slots if s.free and s.k == k]
+            if k in self.spec_pairs:
+                # pairing admission: a target cell is only usable when its
+                # mirror drafter cell is free too (pairs release atomically,
+                # so this is belt-and-braces)
+                kd = self.spec_pairs[k]
+                free = [s for s in free if self.cell(kd, s.m, s.b).free]
             while free:
                 req = self._head(k, now)
                 if req is None:
@@ -328,6 +361,7 @@ class Batcher:
                     self.queues[k].remove(req)
                     del self.resume[req.rid]
                     self.restored += 1
+                    self._attach_draft(slot)
                     admitted.append(slot)
                     continue
                 # recompute-restore rides the normal placement with the
@@ -359,8 +393,38 @@ class Batcher:
                     slot.resume_tokens = list(state.generated)
                     slot.admitted_tick = state.admitted_tick
                     slot.first_token_tick = state.first_token_tick
+                self._attach_draft(slot)
                 admitted.append(slot)
         return admitted
+
+    def _attach_draft(self, slot: Slot) -> None:
+        """Claim the mirror drafter cell for a freshly placed target slot
+        (gang speculation). The drafter shares the target's Request but owns
+        its own block table in the drafter row's partition; it gets no
+        prompt chunks — its cache is rebuilt by the engine's catch-up
+        appends from the committed stream, starting at position 0 after any
+        admission (including restores, where the target resumes mid-decode).
+        Capacity for ``Request.draft_total_len`` was already checked by the
+        placement path."""
+        kd = self.spec_pairs.get(slot.k)
+        if kd is None:
+            return
+        d = self.cell(kd, slot.m, slot.b)
+        assert d.free, "drafter mirror cell occupied"
+        req = slot.request
+        d.request = req
+        d.is_draft = True
+        d.peer = slot
+        slot.peer = d
+        d.pos = 0
+        d.chunks = []
+        d.generated = []
+        d.admitted_tick = slot.admitted_tick
+        if self.allocator is not None:
+            p = self.partition_of(kd, d.b)
+            d.table = BlockTable(self.allocator, p, store=self.store)
+            d.block_commit = blocks_for(req.draft_total_len,
+                                        self.allocator.block_size)
 
     def _place_paged(self, req: Request, free: list,
                      prompt=None) -> Optional[Slot]:
@@ -372,12 +436,21 @@ class Batcher:
         bs = self.allocator.block_size
         total_need = blocks_for(req.total_len, bs)
         limit = int(self.allocator.blocks_per_partition * self.overcommit)
+        # gang speculation: admission also reserves the mirror drafter
+        # cell's commitment in the drafter row's partition
+        kd = self.spec_pairs.get(req.arch)
+        draft_need = (blocks_for(req.draft_total_len, bs)
+                      if kd is not None else 0)
         # per-partition state once per placement (candidate slots map onto
         # only K*n_shards partitions — don't rescan the grid per candidate)
-        parts = {self.partition_of(c.k, c.b) for c in free}
+        tparts = {self.partition_of(c.k, c.b) for c in free}
+        parts = set(tparts)
+        if kd is not None:
+            parts |= {self.partition_of(kd, c.b) for c in free}
         committed, hits, pinned = {}, {}, {}
         for p in parts:
             committed[p] = self.committed_blocks(p)
+        for p in tparts:
             if self.prefix_cache is not None:
                 hits[p] = self.prefix_cache.match(p, prompt)
                 pinned[p] = self._referenced_cached(p)
@@ -385,7 +458,7 @@ class Batcher:
         def hit_len(p):
             return hits[p].hit_tokens if p in hits else 0
 
-        def fits(p):
+        def fits(c):
             # commitment = new blocks + cached blocks this request would pin
             # that no live slot pins yet (pinned blocks charge once) + one
             # fresh block per host-resident matched node (its restore
@@ -393,6 +466,7 @@ class Batcher:
             # by *committed* blocks, not the allocator's free count —
             # commitments from requests admitted earlier this round have not
             # allocated yet but already claim their pool
+            p = self.partition_of(c.k, c.b)
             commit = total_need
             fresh_refs = 0
             if p in hits:
@@ -400,15 +474,20 @@ class Batcher:
                 fresh_refs = (sum(1 for b in hits[p].device_ids
                                   if b not in pinned[p])
                               + hits[p].n_host_blocks)
-            return committed[p] + commit + fresh_refs <= limit
+            if committed[p] + commit + fresh_refs > limit:
+                return False
+            if kd is not None:  # the drafter commitment must fit too
+                pd = self.partition_of(kd, c.b)
+                if committed[pd] + draft_need > limit:
+                    return False
+            return True
 
         # longest hit first (prefix reuse beats perfect balance), then the
         # partition with the fewest committed blocks
         ordered = sorted(free, key=lambda s: (
             -hit_len(self.partition_of(s.k, s.b)),
             committed[self.partition_of(s.k, s.b)], s.m, s.b))
-        slot = next((c for c in ordered
-                     if fits(self.partition_of(c.k, c.b))), None)
+        slot = next((c for c in ordered if fits(c)), None)
         if slot is None:
             return None
         p = self.partition_of(slot.k, slot.b)
@@ -439,7 +518,12 @@ class Batcher:
         bs = self.allocator.block_size
         total_need = blocks_for(req.total_len, bs)
         limit = int(self.allocator.blocks_per_partition * self.overcommit)
+        kd = self.spec_pairs.get(req.arch)
+        draft_need = (blocks_for(req.draft_total_len, bs)
+                      if kd is not None else 0)
         parts = {self.partition_of(c.k, c.b) for c in free}
+        if kd is not None:
+            parts |= {self.partition_of(kd, c.b) for c in free}
         committed = {p: self.committed_blocks(p) for p in parts}
         ordered = sorted(free, key=lambda s: (
             committed[self.partition_of(s.k, s.b)], s.m, s.b))
@@ -447,6 +531,9 @@ class Batcher:
         for cand in ordered:
             p = self.partition_of(cand.k, cand.b)
             if committed[p] + total_need > limit:
+                continue
+            if kd is not None and (committed[self.partition_of(kd, cand.b)]
+                                   + draft_need > limit):
                 continue
             table = BlockTable(self.allocator, p, store=self.store)
             if not table.ensure(n * bs):  # physical pressure: next partition
@@ -481,7 +568,10 @@ class Batcher:
         return groups
 
     def decode_slots(self) -> list:
-        return [s for s in self.slots if s.decoding and not s.finished]
+        """Decoding cells, drafters excluded — the engine drives drafter
+        cells itself inside its speculative draft/verify rounds."""
+        return [s for s in self.slots
+                if s.decoding and not s.finished and not s.is_draft]
 
     def occupied(self) -> int:
         return sum(1 for s in self.slots if not s.free)

@@ -226,6 +226,40 @@ class ServeStats:
         return out
 
 
+@dataclasses.dataclass
+class SpecStats:
+    """Gang-speculation counters: drafter proposals vs target verification.
+
+    The headline metric is target-row ticks per output token — with
+    speculation the target only runs prefill calls and verify calls
+    (drafter rows absorb the autoregressive ticks), so
+    ``(prefill_calls + verify_calls) / tokens_generated`` drops below the
+    target-only engine's ``calls / tokens_generated`` whenever acceptance
+    is non-trivial. Tokens are bit-identical by construction either way.
+    """
+
+    proposed: int = 0  # drafter tokens offered to verify calls
+    accepted: int = 0  # proposals matching the target's own greedy argmax
+    bonus: int = 0  # free target tokens (one per verified row: position
+    # n_acc is the target's own argmax, correct even on full rejection)
+    draft_calls: int = 0  # drafter-row pipeline calls (catch-up + propose)
+    verify_calls: int = 0  # target verify calls (one per spec round)
+    rollback_blocks: int = 0  # pool blocks freed by partial-row truncation
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / self.proposed if self.proposed else 0.0
+
+    def summary(self) -> dict:
+        return {"spec_proposed": self.proposed,
+                "spec_accepted": self.accepted,
+                "spec_bonus_tokens": self.bonus,
+                "spec_draft_calls": self.draft_calls,
+                "spec_verify_calls": self.verify_calls,
+                "spec_rollback_blocks": self.rollback_blocks,
+                "acceptance_rate": round(self.acceptance_rate, 4)}
+
+
 class ServeEngine:
     """Continuous-batching engine: per-arch request queues → (k, m, b) cells.
 
@@ -251,7 +285,8 @@ class ServeEngine:
                  overcommit: float = 1.0, policy: str = "fcfs",
                  prefix_cache: bool = False,
                  host_blocks: Optional[int] = None, spill: bool = True,
-                 fused: bool = False):
+                 fused: bool = False, spec_gamma: int = 0,
+                 spec_pairs: Optional[dict] = None):
         if cfg.rope == "mrope" or cfg.frontend is not None:
             raise ValueError("continuous batching supports text-only archs; "
                              "use the static path for mrope/frontend models")
@@ -285,6 +320,41 @@ class ServeEngine:
                     "state would advance through the padded positions)")
             self.mixed_step = pl.make_serve_step(
                 cfg, self.opts, self.eng, mesh, "mixed", with_active=True)
+        # -- gang speculation: pair each target trial row with a drafter row
+        self.spec_gamma = int(spec_gamma)
+        self.spec_pairs: dict = {}
+        self.verify_step = None
+        self.spec_stats = SpecStats()
+        if self.spec_gamma > 0:
+            if self.spec_gamma < 1:
+                raise ValueError(f"spec_gamma must be >= 1, got {spec_gamma}")
+            if self.fused:
+                raise ValueError(
+                    "gang speculation and fused mixed-tick admission both "
+                    "own the round's ragged call structure; enable one")
+            if cfg.family in ("ssm", "hybrid") or cfg.hybrid is not None:
+                raise ValueError(
+                    "gang speculation is attention-family only (rollback "
+                    "truncates KV positionally; recurrent state cannot be "
+                    "rewound to an earlier position)")
+            if spec_pairs is None:
+                if self.n_arches % 2:
+                    raise ValueError(
+                        f"default drafter pairing needs an even n_trials "
+                        f"(targets 0..K/2-1 draft on K/2..K-1), got "
+                        f"{self.n_arches}; pass spec_pairs explicitly")
+                half = self.n_arches // 2
+                spec_pairs = {k: half + k for k in range(half)}
+            tgt, drf = set(spec_pairs), set(spec_pairs.values())
+            if len(drf) != len(spec_pairs) or (tgt & drf) or not all(
+                    0 <= k < self.n_arches for k in tgt | drf):
+                raise ValueError(
+                    f"spec_pairs must map disjoint target rows to distinct "
+                    f"drafter rows, all within n_trials={self.n_arches}: "
+                    f"got {spec_pairs}")
+            self.spec_pairs = dict(spec_pairs)
+            self.verify_step = pl.make_serve_step(
+                cfg, self.opts, self.eng, mesh, "verify", with_active=True)
         self.paged = bool(self.eng.paged)
         if self.opts.use_paged_kernel and not self.paged:
             raise ValueError("use_paged_kernel attends through block tables; "
@@ -335,7 +405,8 @@ class ServeEngine:
                                rows_per_partition=self.eng.microbatch,
                                overcommit=overcommit, policy=policy,
                                prefix_cache=self.prefix_cache,
-                               store=self.store, transfer=self.transfer)
+                               store=self.store, transfer=self.transfer,
+                               spec_pairs=self.spec_pairs)
         # preemption replaces the stall-retry deadlock guard past 1.0
         self.retractable = self.paged and overcommit > 1.0
         self.tick = 0
@@ -394,7 +465,14 @@ class ServeEngine:
             for qlen, slots in sorted(self.batcher.prefill_groups().items()):
                 self._prefill_call(qlen, slots)
             dec = self.batcher.decode_slots()
-            if dec:
+            if self.spec_pairs:
+                plain = [s for s in dec if s.peer is None]
+                if plain:
+                    self._decode_call(plain)
+                paired = [s for s in dec if s.peer is not None]
+                if paired:
+                    self._spec_round(paired)
+            elif dec:
                 self._decode_call(dec)
         # belt-and-braces: nothing stays in flight across rounds (admission
         # swap-ins with no same-round compute call, e.g.)
@@ -441,6 +519,8 @@ class ServeEngine:
                          self.mb_global), bool)
         for s in slots:
             mask[s.k, s.m, s.b] = True
+            if s.peer is not None:  # the drafter mirror cell starts cold too
+                mask[s.peer.k, s.peer.m, s.peer.b] = True
         self.cache = self.reset_fn(self.cache, jnp.asarray(mask))
 
     def _block_tables(self, slots):
@@ -504,17 +584,28 @@ class ServeEngine:
             cands = [s for s in self.batcher.slots
                      if s.request is not None
                      and self.batcher.partition_of(s.k, s.b) == p
-                     and not any(self.transfer.in_flight(p, b)
-                                 for b in s.table.blocks)]
+                     and not self._pair_in_flight(s)]
             if not cands:
                 return False
             victim = max(cands,
                          key=lambda s: (s.admitted_tick, s.request.rid))
             self._retract(victim)
-            if victim is slot:
+            if slot.request is None:  # the requester (or its pair) lost
                 return False
             if slot.table.ensure(slot.pos + extra):
                 return True
+
+    def _pair_in_flight(self, slot) -> bool:
+        """Whether any block of ``slot``'s table — or its speculation
+        peer's — is an in-flight transfer destination (such a pair cannot
+        be retracted: the pending bytes' home would be reallocated)."""
+        for s in (slot, slot.peer):
+            if s is None or s.table is None:
+                continue
+            p = self.batcher.partition_of(s.k, s.b)
+            if any(self.transfer.in_flight(p, b) for b in s.table.blocks):
+                return True
+        return False
 
     def _retract(self, victim) -> None:
         """Preempt a running request: swap its blocks to host when the tier
@@ -522,8 +613,17 @@ class ServeEngine:
         state), else remember its tokens for a teacher-forced recompute
         replay; release the cell and requeue the request at its queue head
         with its original admission tick (so restore order is stable and a
-        freshly restored row is not the next victim)."""
+        freshly restored row is not the next victim).
+
+        A speculation pair is preempted atomically: a drafter victim is
+        redirected to its target peer (the request lives there), only the
+        target's KV is swapped/replayed — drafter KV is disposable, rebuilt
+        by catch-up from position 0 after re-admission — and both cells
+        release."""
+        if victim.is_draft and victim.peer is not None:
+            victim = victim.peer
         req = victim.request
+        peer = victim.peer
         p = self.batcher.partition_of(victim.k, victim.b)
         gen = (list(victim.generated) if victim.generated
                else (list(victim.resume_tokens)
@@ -536,6 +636,8 @@ class ServeEngine:
                                 admitted_tick=victim.admitted_tick,
                                 first_token_tick=victim.first_token_tick)
         victim.release()
+        if peer is not None:
+            peer.release()
         self.batcher.requeue(req, state)
         self.stats.retractions += 1
 
@@ -681,6 +783,164 @@ class ServeEngine:
             self._maybe_finish(s)
         return len(slots)
 
+    # -- gang speculation ----------------------------------------------------
+
+    def _spec_round(self, slots) -> None:
+        """One propose–verify–commit round for the paired decoding targets.
+
+        Each target's drafter first *catches up* to the committed stream
+        (one append covering every position the drafter has not yet
+        written — after a full accept that is 2 tokens, after a partial
+        accept 1, after admission the whole prompt), emitting its first
+        proposal; ``spec_gamma - 1`` width-1 drafter decodes extend the
+        draft. The target then scores all drafts in ONE ragged verify call
+        (per-row qlens + per-position argmax — PR 8's mixed-tick machinery),
+        commits the longest matching prefix plus its own argmax at the first
+        mismatch, and rolls rejected positions back. Greedy tokens are
+        bit-identical to the target-only engine by construction: every
+        committed token is the target's own argmax at its own position —
+        drafter quality moves only the acceptance rate.
+        """
+        plan, drafts = {}, {}
+        for s in slots:
+            remaining = s.request.max_new_tokens - len(s.generated)
+            # never draft the request's final token: it is emitted by the
+            # verify head and has no successor to verify against
+            plan[id(s)] = min(self.spec_gamma, max(remaining - 1, 0))
+            drafts[id(s)] = []
+        widths: dict = {}
+        for s in slots:
+            if plan[id(s)] > 0:
+                widths.setdefault(s.pos + 1 - s.peer.pos, []).append(s)
+        for w in sorted(widths):
+            self._draft_call(w, widths[w], drafts)
+        for i in range(1, self.spec_gamma):
+            group = [s for s in slots
+                     if s.request is not None and plan[id(s)] > i
+                     and len(drafts[id(s)]) == i]
+            if group:
+                self._draft_call(1, group, drafts)
+        live = [s for s in slots if s.request is not None]
+        if live:
+            self._verify_call(live, drafts)
+
+    def _draft_call(self, w: int, group, drafts) -> None:
+        """One width-``w`` pipeline call on the drafter rows of ``group``:
+        each drafter consumes ``w`` tokens of its extended stream
+        (prompt ++ committed ++ drafts-so-far) from its own depth and its
+        head output is appended to the pair's draft list."""
+        dslots = self._prepare([s.peer for s in group], w)
+        if self.transfer is not None:
+            self.transfer.flush()
+        group = [s for s in group if s.request is not None
+                 and s.peer is not None and s.peer in dslots]
+        if not group:
+            return
+        if self.paged:
+            self._assert_clean([s.peer for s in group], w)
+        tokens, positions, active = self._grid(w)
+        for s in group:
+            d = s.peer
+            ext = s.request.prompt.tolist() + s.generated + drafts[id(s)]
+            tokens[d.k, d.m, d.b, :] = ext[d.pos:d.pos + w]
+            positions[d.k, d.m, d.b] = d.pos
+            active[d.k, d.m, d.b] = True
+        batch = {"tokens": jnp.asarray(tokens),
+                 "positions": jnp.asarray(positions),
+                 "active": jnp.asarray(active)}
+        if self.paged:
+            batch["block_tables"] = jnp.asarray(
+                self._block_tables([s.peer for s in group]))
+        step = self.decode_step if w == 1 else self.append_step
+        self.cache, tok, _ = step(self.params, self.cache, batch)
+        tok = np.asarray(tok)
+        self.stats.calls += 1
+        self.spec_stats.draft_calls += 1
+        for s in group:
+            d = s.peer
+            d.pos += w
+            drafts[id(s)].append(int(tok[d.k, d.m, d.b]))
+
+    def _verify_call(self, slots, drafts) -> None:
+        """ONE ragged verify call scoring every pair's drafts on the target
+        rows, then per-pair accept/commit/rollback."""
+        ready = []
+        for s in slots:
+            if s.request is None:
+                continue
+            extra = len(drafts[id(s)]) + 1
+            if self.paged and not self._ensure(s, extra):
+                if s.request is not None:
+                    self.stats.pool_stalls += 1
+                continue
+            ready.append(s)
+        ready = [s for s in ready if s.request is not None]
+        if self.prefix_cache is not None:
+            ready = [s for s in ready
+                     if self._cow_forks([s], len(drafts[id(s)]) + 1)]
+        if self.transfer is not None:
+            self.transfer.flush()
+        if not ready:
+            self.stats.decode_busy_samples.append(0.0)
+            return
+        if self.paged:
+            for s in ready:
+                self._assert_clean([s], len(drafts[id(s)]) + 1)
+        qmax = max(len(drafts[id(s)]) for s in ready) + 1
+        tokens, positions, active = self._grid(qmax)
+        qlens = np.zeros((self.n_arches, self.eng.n_microbatches,
+                          self.mb_global), np.int32)
+        for s in ready:
+            ds = drafts[id(s)]
+            q = len(ds) + 1
+            # re-feed the last committed token (its KV row is unwritten —
+            # decode-style), then the drafts; the verify head returns the
+            # target's argmax at every one of the q positions
+            tokens[s.k, s.m, s.b, :q] = [s.generated[-1]] + ds
+            positions[s.k, s.m, s.b] = s.pos
+            qlens[s.k, s.m, s.b] = q
+            active[s.k, s.m, s.b] = True
+        batch = {"tokens": jnp.asarray(tokens),
+                 "positions": jnp.asarray(positions),
+                 "qlens": jnp.asarray(qlens),
+                 "active": jnp.asarray(active)}
+        if self.paged:
+            batch["block_tables"] = jnp.asarray(self._block_tables(ready))
+        self.cache, tok, _ = self.verify_step(self.params, self.cache, batch)
+        tok = np.asarray(tok)  # (K, M, mb_global, qmax)
+        self.stats.calls += 1
+        sp = self.spec_stats
+        sp.verify_calls += 1
+        self.stats.decode_busy_samples.append(
+            len(ready) / self.batcher.n_cells)
+        for s in ready:
+            ds = drafts[id(s)]
+            out = [int(t) for t in tok[s.k, s.m, s.b, :len(ds) + 1]]
+            n_acc = 0
+            while n_acc < len(ds) and ds[n_acc] == out[n_acc]:
+                n_acc += 1
+            # accepted prefix + the target's own token at the first mismatch
+            # (or the bonus token after a full accept) — always >= 1 token,
+            # so a round never regresses below plain decode
+            commit = ds[:n_acc] + [out[n_acc]]
+            sp.proposed += len(ds)
+            sp.accepted += n_acc
+            sp.bonus += 1
+            new_pos = s.pos + n_acc + 1
+            d = s.peer
+            if self.paged and n_acc < len(ds):
+                # rejected positions' blocks go back to the free-list head:
+                # pool state is bit-identical to never having written them
+                sp.rollback_blocks += len(s.table.truncate(new_pos))
+            if d is not None and d.pos > new_pos:
+                if self.paged:
+                    sp.rollback_blocks += len(d.table.truncate(new_pos))
+                d.pos = new_pos  # rewind over the rejected draft positions
+            s.pos = new_pos
+            s.generated.extend(commit)
+            self.stats.tokens_generated += len(commit)
+            self._maybe_finish(s)
+
     def _mixed_call(self) -> None:
         """One fused mixed-tick pipeline call for the whole round: every
         prefilling cell rides at its chunk width, every decoding cell at
@@ -795,7 +1055,10 @@ class ServeEngine:
             first_token_tick=slot.first_token_tick)
         self.completions.append(comp)
         self.stats.record_completion(comp)
+        peer = slot.peer
         slot.release()  # the cell is reusable the same round it finishes
+        if peer is not None:  # the drafter mirror cell frees with its target
+            peer.release()
 
 
 # ---------------------------------------------------------------------------

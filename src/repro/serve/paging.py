@@ -205,6 +205,31 @@ class BlockAllocator:
     # legacy alias (PR-3 API): free-on-completion is now a refcount drop
     free = decref
 
+    def rollback(self, ids, partition: int = 0) -> None:
+        """Inverse of :meth:`alloc`, for speculative-decoding rollback:
+        return ``ids`` to the *head* of the partition's free list in their
+        original allocation order, so the allocator ends up bit-identical to
+        never having handed them out. ``decref`` cannot do this — it recycles
+        through the free-list tail, which would permute every later
+        allocation relative to the never-proposed schedule.
+
+        Every id must be exclusively owned (refcount exactly 1): rolling
+        back a block another holder still references (a shared prefix block,
+        a cached block) would corrupt that holder's view, and rolling back a
+        free block is a double-free. Raises ValueError without touching
+        anything on violation (all-or-nothing, like ``alloc``)."""
+        ref = self._ref[partition]
+        ids = list(ids)
+        for i in ids:
+            if ref.get(i, 0) != 1:
+                raise ValueError(
+                    f"rollback of block {i} (partition {partition}) at "
+                    f"refcount {ref.get(i, 0)}: only exclusively-owned "
+                    f"blocks can be rolled back")
+        for i in ids:
+            del ref[i]
+        self._free[partition].extendleft(reversed(ids))
+
 
 class BlockTable:
     """Per-request view of the pool: ordered physical ids backing positions
@@ -299,6 +324,34 @@ class BlockTable:
             self.blocks[i] = dst
             pairs.append((src, dst))
         return pairs
+
+    def truncate(self, n_tokens: int) -> List[int]:
+        """Partial-row rollback: shrink the table to the blocks backing
+        positions [0, n_tokens), un-allocating the tail blocks a rejected
+        speculation grew it by. The dropped blocks must be exclusively owned
+        — speculative writes only ever target the row's write range, which
+        the engine proves private (``_assert_clean``) before the verify call
+        — and they return to the free-list *head* in order
+        (:meth:`BlockAllocator.rollback`), so allocator state is
+        bit-identical to never having grown the table. Shared/seeded prefix
+        blocks sit structurally below any speculation offset and are never
+        touched; the retained tail block may hold stale positions >=
+        ``n_tokens``, which every later read masks via kv_len and every
+        later write overwrites. Returns the dropped ids."""
+        if self._closed:
+            raise RuntimeError("truncate() on a closed block table")
+        keep = blocks_for(n_tokens, self.allocator.block_size)
+        if keep >= len(self.blocks):
+            return []
+        drop = self.blocks[keep:]
+        if self.store is not None:
+            # chokepoint: the store asserts none of the ids is an in-flight
+            # transfer destination before handing them back
+            self.store.rollback(self.partition, drop)
+        else:
+            self.allocator.rollback(drop, self.partition)
+        self.blocks = self.blocks[:keep]
+        return drop
 
     def close(self) -> None:
         """Drop this table's reference on every block. Idempotent (a second

@@ -62,6 +62,17 @@ class Request:
         is emitted by the head and never written back)."""
         return self.prompt_len + self.max_new_tokens - 1
 
+    @property
+    def draft_total_len(self) -> int:
+        """Max cache depth a paired drafter row reaches for this request
+        (gang speculation — the batcher reserves this many positions of
+        drafter capacity at admission). The drafter catches up to the
+        target's committed stream and proposes at most gamma_eff =
+        remaining - 1 tokens ahead, so its depth is bounded by
+        ``total_len - 1``: it never drafts past the position whose token
+        would be the request's final (never-verified) output."""
+        return max(self.total_len - 1, 1)
+
 
 @dataclasses.dataclass
 class Completion:

@@ -78,6 +78,7 @@ class BlockStore:
         self._next_hid = [0] * allocator.n_partitions
         self._clock = 0
         self.host_evictions = 0  # host blocks destroyed under host pressure
+        self.rollbacks = 0  # device blocks un-allocated by spec rollback
 
     # -- queries -------------------------------------------------------------
 
@@ -106,6 +107,25 @@ class BlockStore:
             self.reclaim(partition, n)
             got = self.allocator.alloc(n, partition)
         return got
+
+    def rollback(self, partition: int, ids) -> None:
+        """Speculation rollback chokepoint (``BlockTable.truncate``): assert
+        none of the blocks is an in-flight transfer destination — an
+        in-flight block's bytes are not addressable, so it cannot have been
+        written by the verify call being rolled back, and un-allocating it
+        would hand the pending transfer's destination to a new owner — then
+        return them to the device free-list head via
+        :meth:`BlockAllocator.rollback` (bit-identical pool state)."""
+        ids = list(ids)
+        if self.transfer is not None:
+            for i in ids:
+                if self.transfer.in_flight(partition, i):
+                    raise RuntimeError(
+                        f"rollback of in-flight block {i} (partition "
+                        f"{partition}): pending transfer destinations "
+                        f"cannot be un-allocated")
+        self.allocator.rollback(ids, partition)
+        self.rollbacks += len(ids)
 
     def reclaim(self, partition: int, need: int) -> int:
         """The single chokepoint for pressure-driven reclamation: delegate

@@ -161,6 +161,163 @@ def test_unservable_request_rejected_at_enqueue():
     assert [s.request.rid for s in tight.admit(now=1.0)] == [2]
 
 
+# ---------------------------------------------------------------------------
+# Truncation / speculative rollback
+# ---------------------------------------------------------------------------
+
+
+def snapshot(a, partition=0):
+    return (list(a._free[partition]), dict(a._ref[partition]))
+
+
+def test_truncate_restores_exact_allocator_state():
+    """Growing a table for a rejected speculation and truncating back must
+    leave the allocator bit-identical (free-list order AND refcounts) to
+    never having grown — decref-based freeing would recycle through the
+    tail and permute every later allocation."""
+    a = BlockAllocator(n_blocks=8, block_size=4)
+    t = BlockTable(a)
+    assert t.ensure(9)  # 3 blocks committed (positions 0..8)
+    before = snapshot(a)
+    assert t.ensure(16)  # speculative growth: +1 block
+    dropped = t.truncate(9)
+    assert dropped == [3]
+    assert snapshot(a) == before
+    # the never-grown schedule and the grown-then-rolled-back schedule now
+    # hand out identical ids
+    assert a.alloc(2) == [3, 4]
+    a.free([3, 4])
+    t.close()
+    assert a.all_free()
+
+
+def test_truncate_then_regrow_returns_same_ids():
+    a = BlockAllocator(n_blocks=6, block_size=4)
+    t = BlockTable(a)
+    assert t.ensure(12)
+    grown = list(t.blocks)
+    t.truncate(4)
+    assert t.ensure(12)
+    assert t.blocks == grown  # head-of-free-list restore: same ids, same order
+    t.close()
+
+
+def test_truncate_keeps_partial_tail_block():
+    """Truncating to an offset inside a block keeps that block: its stale
+    positions >= n_tokens are masked by kv_len on read and overwritten by
+    the next append."""
+    a = BlockAllocator(n_blocks=6, block_size=4)
+    t = BlockTable(a)
+    assert t.ensure(12)  # 3 blocks
+    assert t.truncate(6) == [2]  # position 5 lives in block 1: keep 2 blocks
+    assert t.n_blocks == 2 and t.capacity_tokens() == 8
+    assert t.truncate(6) == []  # idempotent at the same offset
+    t.close()
+    with pytest.raises(RuntimeError):
+        t.truncate(1)
+
+
+def test_rollback_of_shared_block_rejected():
+    """Only exclusively-owned blocks may roll back: a shared (incref'd)
+    block has another holder whose view would be corrupted."""
+    a = BlockAllocator(n_blocks=4, block_size=4)
+    t = BlockTable(a)
+    assert t.ensure(8)
+    a.incref([t.blocks[-1]])  # a second holder adopts the tail block
+    with pytest.raises(ValueError):
+        t.truncate(4)
+    # all-or-nothing: the failed rollback left table and refcounts intact
+    assert t.n_blocks == 2 and a.ref_count(t.blocks[-1]) == 2
+    a.decref([t.blocks[-1]])
+    assert t.truncate(4) == [1]
+    t.close()
+    assert a.all_free()
+
+
+def test_rollback_of_free_block_rejected():
+    a = BlockAllocator(n_blocks=4, block_size=4)
+    with pytest.raises(ValueError):
+        a.rollback([0])  # never allocated: refcount 0
+
+
+def test_store_rollback_rejects_in_flight_destination():
+    """A pending transfer destination's bytes are not addressable, so it
+    cannot have been written by the verify call being rolled back —
+    un-allocating it would hand the destination to a new owner."""
+    from repro.serve import BlockStore, make_null_transfer
+
+    a = BlockAllocator(n_blocks=6, block_size=4)
+    tr = make_null_transfer()
+    store = BlockStore(a, host_blocks=0, transfer=tr)
+    t = BlockTable(a, store=store)
+    assert t.ensure(12)
+    tr.copy(0, t.blocks[0], t.blocks[-1])  # tail block is a copy destination
+    with pytest.raises(RuntimeError):
+        t.truncate(4)
+    assert t.n_blocks == 3  # nothing dropped
+    tr._copies.clear()
+    tr._in_flight.clear()  # transfer resolved (flush needs bound kernels)
+    assert t.truncate(4) == [1, 2]
+    assert store.rollbacks == 2
+    t.close()
+    assert a.all_free()
+
+
+def test_truncate_leaves_cow_fork_untouched():
+    """Speculation only ever truncates the private tail; a CoW-forked block
+    in the retained prefix keeps its fresh id and refcount."""
+    a = BlockAllocator(n_blocks=8, block_size=4)
+    shared = BlockTable(a)
+    assert shared.ensure(8)  # blocks [0, 1]
+    t = BlockTable(a)
+    t.seed(list(shared.blocks))
+    a.incref(t.blocks)  # t adopts the shared prefix read-only
+    assert t.ensure(16)  # + private blocks [2, 3]
+    pairs = t.fork_shared(4, 8)  # writer forks the shared tail block
+    assert pairs == [(1, 4)]
+    assert t.truncate(12) == [3]  # rollback drops only the speculative tail
+    assert t.blocks == [0, 4, 2]
+    assert a.ref_count(4) == 1 and a.ref_count(1) == 1
+    t.close()
+    shared.close()
+    assert a.all_free()
+
+
+def test_truncate_property_interleaved_growth():
+    """Property: any interleaving of ensure()/truncate() that returns to a
+    given coverage leaves the allocator in the same state as growing
+    straight to that coverage."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(st.lists(st.tuples(st.booleans(), st.integers(1, 40)),
+                        min_size=1, max_size=12))
+    @hyp.settings(deadline=None, max_examples=60)
+    def run(ops):
+        a = BlockAllocator(n_blocks=10, block_size=4)
+        t = BlockTable(a)
+        cover = 0
+        for grow, n in ops:
+            if grow:
+                if t.ensure(n):
+                    cover = max(cover, n)
+            else:
+                n = min(n, cover)
+                t.truncate(n)
+                cover = min(cover, max(n, 0))
+        # reference: a fresh pool grown straight to the surviving coverage
+        ref = BlockAllocator(n_blocks=10, block_size=4)
+        rt = BlockTable(ref)
+        assert rt.ensure(cover)
+        assert t.blocks == rt.blocks
+        assert snapshot(a) == snapshot(ref)
+        t.close()
+        rt.close()
+        assert a.all_free() and ref.all_free()
+
+    run()
+
+
 def test_admission_balances_partitions():
     """Rows pick the partition with the fewest *committed* blocks (not the
     allocator's free count — same-round admissions have not allocated yet),

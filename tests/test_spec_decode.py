@@ -1,0 +1,154 @@
+"""Gang-speculative decoding: drafter trial rows propose, target rows verify
+in one ragged append call. The contract is exact greedy equivalence — tokens
+bit-identical to the target-only engine AND the single-device oracle — at
+strictly fewer target-row pipeline ticks per output token; drafter quality
+only moves the acceptance rate. Rejected proposals roll the paged block
+tables back (BlockTable.truncate), which must leave allocator state
+bit-identical to never having speculated — including under overcommit
+retraction.
+
+(Multi-device setup comes from tests/conftest.py — pytest-only module.)"""
+import dataclasses  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.serve import Request, ServeEngine  # noqa: E402
+
+from test_serve_engine import build, oracle_tokens  # noqa: E402
+
+GAMMA = 3
+
+
+def spec_trace(vocab, seed=3, n=5):
+    """Longer generations than the base serve traces: speculation amortises
+    per-tick cost over accepted runs, so the win shows on gen-heavy rows."""
+    rng = np.random.default_rng(seed)
+    shapes = [(8, 8), (11, 6), (7, 7), (10, 5), (8, 8), (11, 6)][:n]
+    return [Request(i, rng.integers(0, vocab, (p,)).astype(np.int32), g,
+                    arrival=0.5 * i) for i, (p, g) in enumerate(shapes)]
+
+
+def spec_build(paged=False, **eng_over):
+    """Two-trial gang (row 0 target, row 1 drafter) + the equal-target-
+    capacity baseline: the same grid minus the drafter row."""
+    cfg, opts, mesh, eng, params = build("chatglm3-6b", n_trials=2)
+    if paged:
+        eng = dataclasses.replace(eng, paged=True, block_size=4, n_blocks=40)
+    eng = dataclasses.replace(eng, **eng_over)
+    params_tgt = jax.tree.map(lambda x: x[:1], params)
+    # mirroring row 0's weights onto the drafter row pins acceptance at 1.0
+    params_perf = jax.tree.map(lambda x: jnp.concatenate([x[:1], x[:1]], 0),
+                               params)
+    eng_tgt = dataclasses.replace(eng, n_trials=1)
+    return cfg, opts, mesh, eng, eng_tgt, params, params_perf, params_tgt
+
+
+def run(cfg, eng, mesh, params, opts, reqs, **kw):
+    e = ServeEngine(cfg, eng, mesh, params, opts, **kw)
+    comps = e.run([r.clone() for r in reqs])
+    return e, {c.rid: c.tokens for c in comps}
+
+
+def target_ticks_per_token(e, spec=False):
+    s = e.stats
+    tgt = (s.prefill_calls + e.spec_stats.verify_calls) if spec else s.calls
+    return tgt / max(s.tokens_generated, 1)
+
+
+def test_perfect_drafter_paged_parity_and_fewer_target_ticks():
+    cfg, opts, mesh, eng, eng_tgt, _, params_perf, params_tgt = \
+        spec_build(paged=True)
+    reqs = spec_trace(cfg.vocab_size)
+    e_base, toks_base = run(cfg, eng_tgt, mesh, params_tgt, opts, reqs)
+    e_spec, toks_spec = run(cfg, eng, mesh, params_perf, opts, reqs,
+                            spec_gamma=GAMMA)
+    for r in reqs:
+        assert toks_spec[r.rid] == toks_base[r.rid], \
+            f"request {r.rid}: speculative != target-only"
+        assert toks_spec[r.rid] == oracle_tokens(cfg, opts, params_tgt, r), \
+            f"request {r.rid}: speculative != single-device oracle"
+    assert e_spec.spec_stats.acceptance_rate == 1.0
+    # the perf contract: strictly fewer target-row ticks per output token
+    assert target_ticks_per_token(e_spec, spec=True) < \
+        target_ticks_per_token(e_base)
+    assert e_spec.allocator.all_free() and e_base.allocator.all_free()
+
+
+def test_mixed_drafter_parity_with_rollback():
+    """An untrained drafter (row 1's own init) is rejected nearly every
+    round: tokens must still be bit-identical and every speculatively-grown
+    block must be rolled back into a clean pool."""
+    cfg, opts, mesh, eng, eng_tgt, params, _, params_tgt = \
+        spec_build(paged=True)
+    reqs = spec_trace(cfg.vocab_size, seed=4)
+    _, toks_base = run(cfg, eng_tgt, mesh, params_tgt, opts, reqs)
+    e_spec, toks_spec = run(cfg, eng, mesh, params, opts, reqs,
+                            spec_gamma=GAMMA)
+    for r in reqs:
+        assert toks_spec[r.rid] == toks_base[r.rid], \
+            f"request {r.rid}: rejected speculation changed tokens"
+    assert e_spec.spec_stats.rollback_blocks > 0, \
+        "mixed drafter never exercised block rollback"
+    assert e_spec.spec_stats.acceptance_rate < 1.0
+    assert e_spec.allocator.all_free()
+    assert e_spec.store.rollbacks == e_spec.spec_stats.rollback_blocks
+
+
+def test_dense_spec_parity():
+    """Speculation is cache-layout agnostic: the dense strip path rewinds by
+    position (s.pos) alone — no block bookkeeping to roll back."""
+    cfg, opts, mesh, eng, eng_tgt, _, params_perf, params_tgt = spec_build()
+    reqs = spec_trace(cfg.vocab_size, n=4)
+    _, toks_base = run(cfg, eng_tgt, mesh, params_tgt, opts, reqs)
+    e_spec, toks_spec = run(cfg, eng, mesh, params_perf, opts, reqs,
+                            spec_gamma=GAMMA)
+    for r in reqs:
+        assert toks_spec[r.rid] == toks_base[r.rid]
+    assert e_spec.spec_stats.acceptance_rate == 1.0
+
+
+def test_overcommit_retraction_parity():
+    """Rollback composes with preemption: a pool sized to force retraction
+    mid-stream must still produce bit-identical tokens, with both the victim
+    pair's cells and blocks recovered."""
+    cfg, opts, mesh, eng, eng_tgt, _, params_perf, params_tgt = \
+        spec_build(paged=True, n_blocks=7)
+    reqs = spec_trace(cfg.vocab_size, seed=5, n=6)
+    for r in reqs:
+        r.arrival = 0.0  # all at once: admission overcommits immediately
+    _, toks_base = run(cfg, eng_tgt, mesh, params_tgt, opts, reqs,
+                       overcommit=1.5, host_blocks=16)
+    e_spec, toks_spec = run(cfg, eng, mesh, params_perf, opts, reqs,
+                            spec_gamma=GAMMA, overcommit=1.5, host_blocks=16)
+    assert e_spec.stats.retractions > 0, \
+        "pool never forced a retraction — shrink n_blocks"
+    for r in reqs:
+        assert toks_spec[r.rid] == toks_base[r.rid], \
+            f"request {r.rid}: retraction broke speculative parity"
+    assert e_spec.allocator.all_free()
+
+
+def test_enqueue_to_draft_row_raises():
+    cfg, opts, mesh, eng, _, _, params_perf, _ = spec_build()
+    e = ServeEngine(cfg, eng, mesh, params_perf, opts, spec_gamma=GAMMA)
+    rng = np.random.default_rng(0)
+    bad = Request(0, rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32),
+                  2, arch=1)  # row 1 is the drafter mirror, not a queue
+    with pytest.raises(ValueError):
+        e.batcher.enqueue(bad)
+
+
+def test_spec_config_validation():
+    cfg, opts, mesh, eng, _, _, params_perf, _ = spec_build()
+    with pytest.raises(ValueError):  # fused and spec both own the round
+        ServeEngine(cfg, eng, mesh, params_perf, opts, spec_gamma=GAMMA,
+                    fused=True)
+    with pytest.raises(ValueError):  # target and drafter rows must differ
+        ServeEngine(cfg, eng, mesh, params_perf, opts, spec_gamma=GAMMA,
+                    spec_pairs={0: 0})
+    odd = dataclasses.replace(eng, n_trials=3)
+    with pytest.raises(ValueError):  # no default pairing on odd n_trials
+        ServeEngine(cfg, odd, mesh, params_perf, opts, spec_gamma=GAMMA)
