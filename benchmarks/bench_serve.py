@@ -460,6 +460,64 @@ sd = {
     "spec": e_sp.stats.summary(), "base": e_bp.stats.summary(),
 }
 
+# --- observability overhead: tracing off vs on, same engine + trace -------
+# the telemetry layer's contract: tracing OFF must be free (greedy tokens,
+# tick count and tokens/tick bit-identical to the untraced engine — the
+# disabled path takes one `enabled` branch per hot site), tracing ON must
+# cost < 5% wall tok/s. The trace is long enough (~60+ engine ticks) that
+# 5% is measurable above host jitter, timed runs interleave off/on so
+# machine-state drift hits both variants equally, and wall is min-of-5
+# warm runs per variant; the trace must pass the span validator.
+from repro.obs import (Tracer, TraceInvariantError, validate_spans,
+                       write_events, write_metrics, write_perfetto)
+ob_eng = dataclasses.replace(base, n_microbatches=2, paged=True,
+                             block_size=BLOCK, n_blocks=40)
+ob_reqs = poisson_trace(32, rate=3.0, vocab=cfg.vocab_size,
+                        prompt_lens=(6, 12), gen_lens=(6, 8), seed=31)
+
+
+def timed_run(e, tracer=None):
+    e.stats, e.completions = ServeStats(), []
+    if tracer is not None:
+        tracer.clear()
+    comps = e.run(clone(ob_reqs))
+    return comps, e.stats.wall_s
+
+
+e_off = ServeEngine(cfg, ob_eng, mesh, params, opts)
+ob_tr = Tracer()
+e_on = ServeEngine(cfg, ob_eng, mesh, params, opts, tracer=ob_tr)
+e_off.run(clone(ob_reqs))  # warm jit caches (compile excluded for both)
+e_on.run(clone(ob_reqs))
+wall_off = wall_on = None
+comp_off = comp_on = None
+for _ in range(5):
+    comp_off, w = timed_run(e_off)
+    wall_off = w if wall_off is None else min(wall_off, w)
+    comp_on, w = timed_run(e_on, ob_tr)
+    wall_on = w if wall_on is None else min(wall_on, w)
+try:
+    ob_rep = validate_spans(ob_tr.events)
+    ob_viol = 0
+except TraceInvariantError as ex:
+    ob_rep, ob_viol = {}, len(ex.violations)
+ob_dir = os.path.join("benchmarks", "results")
+os.makedirs(ob_dir, exist_ok=True)
+write_perfetto(ob_tr.events,
+               os.path.join(ob_dir, "obs_overhead.perfetto.json"))
+write_events(ob_tr.events, os.path.join(ob_dir, "obs_overhead.events.jsonl"))
+write_metrics(e_on.stats.snapshot(),
+              os.path.join(ob_dir, "obs_overhead.metrics.jsonl"))
+obs = {
+    "n_requests": len(ob_reqs),
+    "token_mismatches": sum(a.tokens != b.tokens
+                            for a, b in zip(comp_off, comp_on)),
+    "n_events": len(ob_tr.events),
+    "span_violations": ob_viol, "span_report": ob_rep,
+    "wall_s_off": wall_off, "wall_s_on": wall_on,
+    "off": e_off.stats.summary(), "on": e_on.stats.summary(),
+}
+
 # --- continuous vs static (uniform prompts, staggered budgets) ------------
 PROMPT, MAX_GEN, N_REQ = 8, 8, 18
 max_seq = PROMPT + MAX_GEN
@@ -485,7 +543,7 @@ print(json.dumps({
     "continuous": cs.summary(), "static": ss.summary(),
     "paged_vs_dense": pvd, "multiarch": mvs, "policies": pol,
     "prefix": pfx, "overcommit": ovc, "spill": spl, "paged_kernel": pk,
-    "fused": fa, "spec_decode": sd}))
+    "fused": fa, "spec_decode": sd, "obs": obs}))
 """
 
 
@@ -493,7 +551,7 @@ def run() -> list:
     proc = subprocess.run(
         [sys.executable, "-c", _CHILD],
         env={**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")},
-        capture_output=True, text=True, timeout=580, cwd=ROOT)
+        capture_output=True, text=True, timeout=1100, cwd=ROOT)
     if proc.returncode != 0:
         return [{"name": "serve/error", "us_per_call": -1,
                  "derived": {"stderr": proc.stderr[-500:]}}]
@@ -795,6 +853,39 @@ def run() -> list:
     if (sd["token_mismatches"] or sd["oracle_mismatches"]
             or speedup < 1.3 or sd["rollback_blocks_mixed"] == 0
             or not sd["all_free_after"]):
+        row["us_per_call"] = -1
+    rows.append(row)
+    obs = d["obs"]
+    off, on = obs["off"], obs["on"]
+    tpt_off = off["tokens_generated"] / max(off["ticks"], 1)
+    tpt_on = on["tokens_generated"] / max(on["ticks"], 1)
+    # tokens equal + wall ratio >= 0.95 <=> tracing-on wall tok/s within 5%
+    wall_ratio = obs["wall_s_off"] / max(obs["wall_s_on"], 1e-9)
+    row = {
+        "name": "serve/obs_overhead",
+        "us_per_call": upc(on),
+        "derived": {
+            "n_requests": obs["n_requests"],
+            "n_events": obs["n_events"],
+            "span_violations": obs["span_violations"],
+            "requests_traced": obs["span_report"].get("requests", 0),
+            "completed_traced": obs["span_report"].get("completed", 0),
+            "ticks_off": off["ticks"], "ticks_on": on["ticks"],
+            "tokens_per_tick_off": round(tpt_off, 3),
+            "tokens_per_tick_on": round(tpt_on, 3),
+            "wall_s_off": round(obs["wall_s_off"], 4),
+            "wall_s_on": round(obs["wall_s_on"], 4),
+            "wall_ratio_off_over_on": round(wall_ratio, 4),
+            "token_mismatches": obs["token_mismatches"],
+        },
+    }
+    # the telemetry claim IS a failure condition: tracing OFF must change
+    # nothing (bit-identical greedy tokens, identical tick count and
+    # tokens/tick vs the traced engine), tracing ON must stay within 5%
+    # wall tok/s, and the emitted trace must pass the span validator
+    if (obs["token_mismatches"] or obs["span_violations"]
+            or off["ticks"] != on["ticks"] or tpt_off != tpt_on
+            or wall_ratio < 0.95):
         row["us_per_call"] = -1
     rows.append(row)
     return rows

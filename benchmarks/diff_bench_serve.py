@@ -151,8 +151,26 @@ def self_test():
     assert not failures, f"INFO metric failed the wall: {failures}"
     assert [e[5] for e in entries
             if e[1] == "acceptance_rate"] == ["INFO"], entries
+    # the telemetry row: its tokens_per_tick_* / us_per_call metrics are
+    # gated like any serve row — fresh-only it reports NEW, and once in the
+    # baseline a past-threshold tokens/tick drop fails the wall
+    traced = dict(base)
+    traced[("serve/obs_overhead", "tokens_per_tick_on")] = 2.0
+    traced[("serve/obs_overhead", "us_per_call")] = 300.0
+    entries, failures = diff(base, traced)
+    assert not failures, f"fresh obs_overhead row failed the wall: {failures}"
+    assert {(e[0], e[1]) for e in entries if e[5] == "NEW"} == {
+        ("serve/obs_overhead", "tokens_per_tick_on"),
+        ("serve/obs_overhead", "us_per_call")}, entries
+    slow_trace = dict(traced)
+    slow_trace[("serve/obs_overhead", "tokens_per_tick_on")] = 1.0  # -50%
+    _, failures = diff(traced, slow_trace)
+    assert [(f[0], f[1]) for f in failures] == \
+        [("serve/obs_overhead", "tokens_per_tick_on")], \
+        f"obs_overhead tokens/tick drop not caught: {failures}"
     print("self-test passed: 20% drops fail, <=15% noise and reruns pass, "
-          "fresh-only rows report NEW, acceptance_rate stays INFO")
+          "fresh-only rows (incl. serve/obs_overhead) report NEW, "
+          "acceptance_rate stays INFO, obs_overhead drops are gated")
 
 
 def main():

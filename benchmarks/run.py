@@ -6,7 +6,10 @@ Prints ``name,us_per_call,derived`` CSV:
   pipeline_throughput/* paper D2 (measured Hydra vs sequential MP wall time)
   exactness/*   paper D3 (pipelined == sequential training)
   serve/*       continuous vs static, paged vs dense, K-arch gang vs
-                sequential single-arch engines, admission policies
+                sequential single-arch engines, admission policies,
+                telemetry overhead (obs_overhead: tracing-off parity +
+                tracing-on < 5% wall cost; writes the traced run's
+                Perfetto/event/metrics artifacts into benchmarks/results/)
   roofline/*    §Roofline terms per (arch × shape) from the dry-run artifacts
 
 ``--json PATH`` additionally writes the rows as a JSON list (the nightly CI

@@ -21,6 +21,7 @@ from repro.core.scheduler import GangPlan, TrialSpec, plan_gangs
 from repro.core.trials import TrialResult
 from repro.data.pipeline import TrainBatches
 from repro.models.layers import ModelOptions
+from repro.obs.tracer import resolve
 from repro.optim.adamw import AdamW
 from repro.runtime.fault_tolerance import LoopConfig, run_with_restarts
 
@@ -40,10 +41,14 @@ class HydraRunner:
     """Runs one gang (same-arch trials) as a single shard-parallel program."""
 
     def __init__(self, cfg: ArchConfig, opts: ModelOptions, mesh,
-                 hydra_cfg: HydraConfig, optimizer: Optional[AdamW] = None):
+                 hydra_cfg: HydraConfig, optimizer: Optional[AdamW] = None,
+                 tracer=None):
         self.cfg, self.opts, self.mesh = cfg, opts, mesh
         self.hc = hydra_cfg
         self.optimizer = optimizer or AdamW(grad_clip=1.0)
+        # gang/rung wall-clock spans for the obs timeline (NULL_TRACER when
+        # off — span emission is two events per gang, never per step)
+        self.trace = resolve(tracer)
 
     def _build(self, gang: GangPlan):
         eng = gang.engine
@@ -67,6 +72,9 @@ class HydraRunner:
                  ) -> list[TrialResult]:
         eng = gang.engine
         n_steps = n_steps or self.hc.steps
+        if self.trace.enabled:
+            self.trace.span_begin("gang", arch=gang.arch,
+                                  n_trials=eng.n_trials, steps=n_steps)
         params, opt_state, hparams, step_fn = self._build(gang)
         data = TrainBatches(self.cfg, eng, self.hc.seq_len,
                             seed=self.hc.seed)
@@ -101,6 +109,8 @@ class HydraRunner:
             losses = np.asarray(report.step_metrics[-1]["loss"])
         # held-out evaluation: a fresh deterministic batch beyond train steps
         val = self.evaluate(gang, params, hparams, step=10_000_000)
+        if self.trace.enabled:
+            self.trace.span_end("gang", arch=gang.arch)
         return [TrialResult(spec=t, steps=n_steps,
                             train_loss=float(losses[i]),
                             val_loss=float(val[i]))
@@ -133,21 +143,33 @@ class HydraRunner:
 def run_model_selection(cfg: ArchConfig, opts: ModelOptions, mesh,
                         hydra_cfg: HydraConfig, trials: Sequence[TrialSpec],
                         base_eng: pl.EngineConfig,
-                        strategy=None) -> dict:
+                        strategy=None, tracer=None) -> dict:
     """Full Hydra workflow: plan gangs, train them shard-parallel, select.
+
+    ``tracer`` (``repro.obs.Tracer``) wraps each successive-halving rung —
+    every ``train_fn`` invocation — and each gang in wall-clock spans, so
+    a search run exports the same Perfetto timeline as a serve run.
 
     Returns {"best": TrialResult, "all": [TrialResult...], "gangs": int}.
     """
-    runner = HydraRunner(cfg, opts, mesh, hydra_cfg)
+    trace = resolve(tracer)
+    runner = HydraRunner(cfg, opts, mesh, hydra_cfg, tracer=tracer)
     all_results: list[TrialResult] = []
+    rung = [0]  # train_fn call index (a halving strategy calls it per rung)
 
     def train_fn(specs, n_steps):
+        if trace.enabled:
+            trace.span_begin("rung", label=rung[0], n_trials=len(specs),
+                             steps=n_steps)
         gangs = plan_gangs(specs, base_eng, {cfg.name: cfg},
                            hydra_cfg.seq_len)
         out = []
         for g in gangs:
             out.extend(runner.run_gang(g, n_steps))
         all_results.extend(out)
+        if trace.enabled:
+            trace.span_end("rung", label=rung[0])
+        rung[0] += 1
         return out
 
     if strategy is None:

@@ -1003,7 +1003,7 @@ def pipeline_serve(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
 
 def make_serve_step(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
                     mesh, mode: str, jit: bool = True,
-                    with_active: bool = False) -> Callable:
+                    with_active: bool = False, tracer=None) -> Callable:
     """Builds the jitted pipelined serving step.
 
     ``mode``: prefill | decode | append | mixed | verify. ``append`` is the
@@ -1018,6 +1018,12 @@ def make_serve_step(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
     (K,M,mb) bool ``active`` row mask to the batch: inactive rows never touch
     their cache (the serve engine uses it to let idle/decoding slots ride
     along during admission and vice versa).
+    ``tracer`` (an *enabled* ``repro.obs.Tracer``) wraps the step to emit a
+    ``compile`` event on the first call of each (token qlen, block-table
+    width) shape signature — exactly the signatures XLA retraces, so the
+    serving timeline shows every shape-bucket recompile. Pass None (not a
+    NullTracer) when tracing is off: the returned step is then the bare
+    jitted fn with zero wrapper overhead.
     Returns fn(params, cache, batch) -> (new_cache, tokens, logit_max).
     """
     if mode in ("append", "mixed", "verify") and cfg.rope == "mrope":
@@ -1061,9 +1067,21 @@ def make_serve_step(cfg: ArchConfig, opts: ModelOptions, eng: EngineConfig,
         in_specs=(pspecs, cspecs, bspecs),
         out_specs=(cspecs, batch_ax, batch_ax),
         check_vma=False)
-    if not jit:
-        return mapped
-    return jax.jit(mapped, donate_argnums=(1,))
+    fn = jax.jit(mapped, donate_argnums=(1,)) if jit else mapped
+    if tracer is None or not tracer.enabled:
+        return fn
+    seen: set = set()
+
+    def traced(params, cache, batch):
+        bt = batch.get("block_tables")
+        key = (int(batch["tokens"].shape[-1]),
+               int(bt.shape[-1]) if bt is not None else 0)
+        if key not in seen:
+            seen.add(key)
+            tracer.compile(mode, qlen=key[0], table_width=key[1])
+        return fn(params, cache, batch)
+
+    return traced
 
 
 def make_slot_reset(cfg: ArchConfig, eng: EngineConfig, mesh,

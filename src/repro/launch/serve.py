@@ -54,6 +54,8 @@ from repro.core import scheduler as sched
 from repro.core.partitioner import plan_stages
 from repro.launch.mesh import make_test_mesh
 from repro.models.layers import ModelOptions
+from repro.obs import (Tracer, report, write_events, write_metrics,
+                       write_perfetto)
 from repro.serve import (POLICIES, Request, ServeEngine, blocks_for,
                          load_trace, poisson_trace, static_serve)
 
@@ -167,6 +169,17 @@ def build_args():
                     "acceptance rate")
     ap.add_argument("--spec-gamma", type=int, default=3,
                     help="draft tokens proposed per speculation round")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace-event / Perfetto JSON "
+                    "timeline of the run here (one track per (k,m,b) slot "
+                    "cell + pool/host-tier/queue counter tracks; open at "
+                    "https://ui.perfetto.dev). Enables tracing")
+    ap.add_argument("--events-out", default="",
+                    help="write the raw structured event log (JSONL, one "
+                    "event per line) here. Enables tracing")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the run's metric registry snapshot (JSONL, "
+                    "one metric per line) here")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 
@@ -241,14 +254,8 @@ def main():
             overcommit=args.overcommit if args.paged else 1.0,
             host_blocks=args.host_blocks)
         slots = min(planned.n_microbatches, args.max_slots)
-        print(f"capacity plan: {planned.n_trials} trial row(s) x "
-              f"{planned.n_microbatches} slots fit the HBM budget; "
-              f"using {slots} slots/trial"
-              + (f" (pool: {planned.n_blocks} x {planned.block_size}-token "
-                 f"blocks per trial"
-                 + (f" + {planned.host_blocks} host blocks/partition"
-                    if planned.host_blocks else "")
-                 + ")" if args.paged else ""))
+        for line in report.render_capacity_plan(planned, slots, args.paged):
+            print(line)
         base = dataclasses.replace(base, n_microbatches=slots,
                                    n_blocks=planned.n_blocks,
                                    host_blocks=planned.host_blocks)
@@ -332,6 +339,12 @@ def main():
                                   jax.random.PRNGKey(args.seed),
                                   max_pos=max_seq)
 
+    tracing = bool(args.trace_out or args.events_out)
+    if tracing and args.static:
+        raise SystemExit("--trace-out/--events-out trace the continuous "
+                         "engine's rounds; drop --static")
+    tracer = Tracer() if tracing else None
+
     if args.static:
         completions, stats = static_serve(cfg, eng, mesh, params, requests,
                                           opts)
@@ -343,7 +356,7 @@ def main():
                              spill=not args.no_spill,
                              fused=args.fused_admission,
                              spec_gamma=args.spec_gamma if args.spec_draft
-                             else 0, spec_pairs=spec_pairs)
+                             else 0, spec_pairs=spec_pairs, tracer=tracer)
         completions = engine.run(requests)
         stats = engine.stats
         mode = "continuous/paged" if args.paged else "continuous"
@@ -358,60 +371,31 @@ def main():
         if args.arches > 1:
             mode += f" x{args.arches}-arch gang"
 
-    for c in completions[:8]:
-        arch = f" arch={c.arch}" if args.arches > 1 else ""
-        print(f"  req[{c.rid}]{arch} plen={c.prompt_len} "
-              f"queue={c.queue_ticks:.1f} ttft={c.ttft_ticks:.1f} "
-              f"latency={c.latency_ticks:.1f} generated {c.tokens}")
-    if len(completions) > 8:
-        print(f"  ... {len(completions) - 8} more")
     s = stats.summary()
-    print(f"{mode}: {len(completions)} requests, "
-          f"{s['tokens_generated']} tokens generated in {s['ticks']} ticks "
-          f"({s['tokens_per_s']} tok/s on this host)")
-    print(f"slot occupancy {s['slot_occupancy']}, "
-          f"decode occupancy {s['decode_occupancy']}")
-    if "mixed_calls" in s:
-        print(f"fused admission: {s['mixed_calls']} mixed calls out of "
-              f"{s['calls']}, wave fill ratio {s['mixed_fill_ratio']}")
-    if "ttft_p50" in s:
-        print(f"TTFT p50/p95 {s['ttft_p50']}/{s['ttft_p95']} ticks, "
-              f"TPOT p50/p95 {s.get('tpot_p50', 0)}/{s.get('tpot_p95', 0)} "
-              f"ticks/token [{args.policy}]")
-    if "tokens_per_arch" in s:
-        per = ", ".join(f"arch{k}={v}" for k, v in s["tokens_per_arch"].items())
-        print(f"tokens per arch: {per}")
+    lines = report.render_completions(completions, multi_arch=args.arches > 1)
+    lines += report.render_summary(mode, len(completions), s,
+                                   policy=args.policy)
     if args.paged:
-        print(f"block pool: {eng.n_blocks} x {eng.block_size}-token blocks "
-              f"per trial, peak in use {s.get('peak_blocks_in_use', 0)}, "
-              f"pool stalls {s.get('pool_stalls', 0)}")
-        if args.overcommit > 1.0 or eng.host_blocks > 0:
-            print(f"tiered store: {s.get('retractions', 0)} retractions, "
-                  f"{s.get('restored', 0)} restored, "
-                  f"{s.get('swap_out_blocks', 0)} blocks swapped out, "
-                  f"{s.get('swap_in_blocks', 0)} swapped in "
-                  f"(host tier {eng.host_blocks} blocks/partition)")
+        lines += report.render_paged(s, eng.n_blocks, eng.block_size,
+                                     eng.host_blocks, args.overcommit)
     if args.spec_draft and not args.static:
-        sp = engine.spec_stats.summary()
-        ticks_base = s["calls"] / max(s["tokens_generated"], 1)
-        ticks_spec = ((s["prefill_calls"] + sp["spec_verify_calls"])
-                      / max(s["tokens_generated"], 1))
-        print(f"speculation: {sp['spec_accepted']}/{sp['spec_proposed']} "
-              f"drafts accepted (rate {sp['acceptance_rate']}), "
-              f"{sp['spec_bonus_tokens']} bonus tokens, "
-              f"{sp['spec_draft_calls']} draft calls / "
-              f"{sp['spec_verify_calls']} verify calls, "
-              f"{sp['spec_rollback_blocks']} blocks rolled back; "
-              f"target ticks/token {ticks_spec:.3f} "
-              f"(vs {ticks_base:.3f} counting drafter ticks)")
+        lines += report.render_spec(s, engine.spec_stats.summary())
     if args.prefix_cache:
-        print(f"prefix cache: {s.get('prefix_hits', 0)} hits "
-              f"({s.get('prefix_hit_tokens', 0)} tokens, "
-              f"{s.get('host_hit_tokens', 0)} via host restores), "
-              f"{s.get('prefix_inserts', 0)} blocks cached, "
-              f"{s.get('prefix_spills', 0)} spilled to host, "
-              f"{s.get('prefix_evictions', 0)} evicted, "
-              f"{s.get('cow_forks', 0)} CoW forks")
+        lines += report.render_prefix(s)
+    for line in lines:
+        print(line)
+
+    if tracer is not None:
+        if args.trace_out:
+            n = write_perfetto(tracer.events, args.trace_out)
+            print(f"wrote {n} trace records -> {args.trace_out} "
+                  f"(open at https://ui.perfetto.dev)")
+        if args.events_out:
+            n = write_events(tracer.events, args.events_out)
+            print(f"wrote {n} events -> {args.events_out}")
+    if args.metrics_out:
+        n = write_metrics(stats.snapshot(), args.metrics_out)
+        print(f"wrote {n} metrics -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

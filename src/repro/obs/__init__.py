@@ -1,0 +1,14 @@
+"""Observability layer: structured tracing, typed metrics, and exporters.
+
+``obs`` gives the serve + search stacks a timeline instead of a single
+end-of-run number: per-request lifecycle events, per-round engine
+records, a Chrome trace-event/Perfetto export, and a MetricRegistry of
+counters/gauges/bounded-reservoir histograms behind ``ServeStats``.
+"""
+from repro.obs import report  # noqa: F401
+from repro.obs.export import (TICK_US, read_events, to_chrome_trace,  # noqa: F401
+                              write_events, write_metrics, write_perfetto)
+from repro.obs.metrics import (DEFAULT_RESERVOIR_CAP, Counter, Gauge,  # noqa: F401
+                               MetricRegistry, Reservoir)
+from repro.obs.tracer import NULL_TRACER, NullTracer, Tracer, resolve  # noqa: F401
+from repro.obs.validate import TraceInvariantError, validate_spans  # noqa: F401

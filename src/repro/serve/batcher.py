@@ -59,6 +59,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.obs.tracer import resolve
 from repro.serve.paging import BlockAllocator, BlockTable, blocks_for
 from repro.serve.request import Request
 
@@ -173,7 +174,7 @@ class Batcher:
                  allocator: Optional[BlockAllocator] = None,
                  rows_per_partition: int = 0, overcommit: float = 1.0,
                  policy: str = "fcfs", prefix_cache=None, store=None,
-                 transfer=None, spec_pairs=None):
+                 transfer=None, spec_pairs=None, tracer=None):
         if policy not in POLICIES:
             raise ValueError(f"unknown admission policy {policy!r} "
                              f"(choose from {POLICIES})")
@@ -188,6 +189,7 @@ class Batcher:
         self.store = store if store is not None else (
             prefix_cache.store if prefix_cache is not None else None)
         self.transfer = transfer  # TransferEngine (swap-restore admission)
+        self.trace = resolve(tracer)
         self.resume: dict = {}  # rid -> ResumeState for retracted requests
         self.restored = 0  # retracted requests brought back into a slot
         self.n_microbatches = n_microbatches
@@ -273,6 +275,9 @@ class Batcher:
                     f"(blocks_per_partition="
                     f"{self.allocator.blocks_per_partition}, overcommit="
                     f"{self.overcommit}) — it could never be admitted")
+        if self.trace.enabled:
+            self.trace.req("enqueue", req.rid, arch=req.arch,
+                           plen=req.prompt_len)
         self.queues[req.arch].append(req)
 
     def requeue(self, req: Request,

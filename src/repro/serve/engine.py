@@ -102,6 +102,8 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import pipeline as pl
 from repro.models.layers import ModelOptions
+from repro.obs.metrics import MetricRegistry
+from repro.obs.tracer import resolve
 from repro.serve.batcher import Batcher, ResumeState
 from repro.serve.paging import BlockAllocator, blocks_for
 from repro.serve.prefix_cache import PrefixCache
@@ -114,64 +116,102 @@ def _pctl(samples, q) -> float:
     return float(np.percentile(np.asarray(samples, np.float64), q))
 
 
-@dataclasses.dataclass
-class ServeStats:
-    """Scheduling/throughput counters for one engine run."""
+# ServeStats' numeric fields, now typed metrics in a MetricRegistry (the
+# attribute name IS the metric name, so exports need no mapping table)
+_COUNTER_FIELDS = (
+    "ticks", "calls", "prefill_calls", "mixed_calls", "prefill_slot_ticks",
+    "tokens_generated", "prompt_tokens", "pool_stalls", "prefix_hits",
+    "prefix_hit_tokens", "prefix_inserts", "prefix_evictions",
+    "prefix_spills", "host_hit_tokens", "cow_forks", "retractions",
+    "restored", "swap_out_blocks", "swap_in_blocks")
+_GAUGE_FIELDS = ("wall_s", "peak_live")
+_HIST_FIELDS = (
+    "occupancy_samples", "decode_busy_samples", "mixed_fill_samples",
+    "block_usage_samples", "ttft_samples", "tpot_samples")
+_ROUTED = frozenset(_COUNTER_FIELDS + _GAUGE_FIELDS + _HIST_FIELDS)
 
-    ticks: int = 0
-    calls: int = 0
-    prefill_calls: int = 0  # append-mode pipeline calls (prefill waves)
-    mixed_calls: int = 0  # fused mixed-tick pipeline calls (prefill + decode)
-    prefill_slot_ticks: int = 0  # (cell, round) pairs spent prefilling —
-    # the per-request prefill-tick total (calls group concurrent cells, so
-    # this is the measure a prefix-cache hit actually shrinks)
-    tokens_generated: int = 0
-    prompt_tokens: int = 0
-    wall_s: float = 0.0
-    peak_live: int = 0  # max concurrently admitted requests (capacity used)
-    pool_stalls: int = 0  # paged: row-rounds deferred on an exhausted pool
-    prefix_enabled: bool = False  # radix prefix cache active
-    prefix_hits: int = 0  # admitted requests with a non-empty prefix hit
-    prefix_hit_tokens: int = 0  # prompt tokens served from cached blocks
-    prefix_inserts: int = 0  # blocks adopted into the radix tree
-    prefix_evictions: int = 0  # cached nodes destroyed (gone from BOTH tiers)
-    prefix_spills: int = 0  # cached nodes spilled device -> host (matchable)
-    host_hit_tokens: int = 0  # prefix-hit tokens served via host restores
-    cow_forks: int = 0  # shared tail blocks forked copy-on-write
-    retractions: int = 0  # running requests preempted under overcommit > 1
-    restored: int = 0  # retracted requests re-admitted (swap or recompute)
-    swap_out_blocks: int = 0  # block payloads extracted device -> host
-    swap_in_blocks: int = 0  # block payloads restored host -> device
-    occupancy_samples: list = dataclasses.field(default_factory=list)
-    decode_busy_samples: list = dataclasses.field(default_factory=list)
-    mixed_fill_samples: list = dataclasses.field(default_factory=list)
-    block_usage_samples: list = dataclasses.field(default_factory=list)
-    ttft_samples: list = dataclasses.field(default_factory=list)  # ticks
-    tpot_samples: list = dataclasses.field(default_factory=list)  # ticks
-    tokens_per_arch: dict = dataclasses.field(default_factory=dict)
+
+class ServeStats:
+    """Scheduling/throughput counters for one engine run.
+
+    A facade over :class:`repro.obs.metrics.MetricRegistry`: counters and
+    gauges keep their legacy attribute interface (``stats.calls += 1``,
+    ``stats.wall_s = ...``) by routing reads/writes through the registry,
+    and the former unbounded ``*_samples`` lists are bounded
+    :class:`~repro.obs.metrics.Reservoir` histograms that still support
+    ``append``/``len``/``max``/``np.mean``. ``summary()`` keeps its exact
+    historical key set (plus additive p99s), so bench gates and tests see
+    the same shape.
+
+    Counter semantics (unchanged):
+
+    * ``prefill_calls`` — append-mode pipeline calls (prefill waves);
+      ``mixed_calls`` — fused mixed-tick calls (prefill + decode).
+    * ``prefill_slot_ticks`` — (cell, round) pairs spent prefilling — the
+      per-request prefill-tick total (calls group concurrent cells, so this
+      is the measure a prefix-cache hit actually shrinks).
+    * ``peak_live`` — max concurrently admitted requests (capacity used);
+      ``pool_stalls`` — paged row-rounds deferred on an exhausted pool.
+    * prefix cache: ``prefix_hits`` (admitted requests with a non-empty
+      hit), ``prefix_hit_tokens``, ``prefix_inserts`` (blocks adopted),
+      ``prefix_evictions`` (nodes destroyed — gone from BOTH tiers),
+      ``prefix_spills`` (nodes spilled device → host, still matchable),
+      ``host_hit_tokens`` (hit tokens served via host restores),
+      ``cow_forks`` (shared tail blocks forked copy-on-write).
+    * tiered store: ``retractions`` (running requests preempted under
+      overcommit > 1), ``restored`` (retracted requests re-admitted),
+      ``swap_out_blocks`` / ``swap_in_blocks`` (payloads device ↔ host).
+    """
+
+    def __init__(self, prefix_enabled: bool = False,
+                 registry: Optional[MetricRegistry] = None):
+        # bypass __setattr__ for the plain attributes (the registry most of
+        # all — routing consults it)
+        object.__setattr__(self, "registry",
+                           registry if registry is not None
+                           else MetricRegistry())
+        object.__setattr__(self, "prefix_enabled", bool(prefix_enabled))
+        object.__setattr__(self, "tokens_per_arch", {})
+        for n in _COUNTER_FIELDS:
+            self.registry.counter(n)
+        self.registry.gauge("wall_s", 0.0)
+        self.registry.gauge("peak_live", 0)
+        for n in _HIST_FIELDS:
+            self.registry.histogram(n)
+
+    def __getattr__(self, name):
+        # normal lookup failed: metric fields live in the registry
+        try:
+            reg = object.__getattribute__(self, "registry")
+            return reg.value(name)
+        except KeyError:
+            raise AttributeError(name) from None
+
+    def __setattr__(self, name, value):
+        if name in _ROUTED:
+            self.registry.set_value(name, value)  # TypeError on histograms
+        else:
+            object.__setattr__(self, name, value)
 
     @property
     def slot_occupancy(self) -> float:
         """Mean fraction of slot cells holding a live request, sampled once
         per engine round — the paper's utilization story applied to serving."""
-        if not self.occupancy_samples:
-            return 0.0
-        return float(np.mean(self.occupancy_samples))
+        s = self.occupancy_samples
+        return s.mean_value if s else 0.0
 
     @property
     def decode_occupancy(self) -> float:
         """Mean busy fraction of the decode step's rows."""
-        if not self.decode_busy_samples:
-            return 0.0
-        return float(np.mean(self.decode_busy_samples))
+        s = self.decode_busy_samples
+        return s.mean_value if s else 0.0
 
     @property
     def mixed_fill_ratio(self) -> float:
         """Mean fraction of the mixed wave's padded (cell, qmax) token grid
         carrying real tokens — how much of each fused call is useful work."""
-        if not self.mixed_fill_samples:
-            return 0.0
-        return float(np.mean(self.mixed_fill_samples))
+        s = self.mixed_fill_samples
+        return s.mean_value if s else 0.0
 
     @property
     def tokens_per_s(self) -> float:
@@ -183,6 +223,15 @@ class ServeStats:
             self.tpot_samples.append(comp.tpot_ticks)
         self.tokens_per_arch[comp.arch] = (
             self.tokens_per_arch.get(comp.arch, 0) + len(comp.tokens))
+
+    def snapshot(self) -> dict:
+        """Every metric (counters/gauges as numbers, histograms summarized)
+        for the metrics exporter; ``summary()`` stays the human/bench view."""
+        out = self.registry.snapshot()
+        if len(self.tokens_per_arch) > 1:
+            for k in sorted(self.tokens_per_arch):
+                out[f"tokens_arch{k}"] = self.tokens_per_arch[k]
+        return out
 
     def summary(self) -> dict:
         out = {"ticks": self.ticks, "calls": self.calls,
@@ -201,15 +250,18 @@ class ServeStats:
         if self.ttft_samples:
             out["ttft_p50"] = round(_pctl(self.ttft_samples, 50), 2)
             out["ttft_p95"] = round(_pctl(self.ttft_samples, 95), 2)
+            out["ttft_p99"] = round(_pctl(self.ttft_samples, 99), 2)
         if self.tpot_samples:
             out["tpot_p50"] = round(_pctl(self.tpot_samples, 50), 2)
             out["tpot_p95"] = round(_pctl(self.tpot_samples, 95), 2)
+            out["tpot_p99"] = round(_pctl(self.tpot_samples, 99), 2)
         if len(self.tokens_per_arch) > 1:
             out["tokens_per_arch"] = {
                 k: self.tokens_per_arch[k]
                 for k in sorted(self.tokens_per_arch)}
         if self.block_usage_samples:
-            out["peak_blocks_in_use"] = int(max(self.block_usage_samples))
+            out["peak_blocks_in_use"] = int(
+                self.block_usage_samples.max_value)
             out["pool_stalls"] = self.pool_stalls
             out["retractions"] = self.retractions
             out["restored"] = self.restored
@@ -286,7 +338,7 @@ class ServeEngine:
                  prefix_cache: bool = False,
                  host_blocks: Optional[int] = None, spill: bool = True,
                  fused: bool = False, spec_gamma: int = 0,
-                 spec_pairs: Optional[dict] = None):
+                 spec_pairs: Optional[dict] = None, tracer=None):
         if cfg.rope == "mrope" or cfg.frontend is not None:
             raise ValueError("continuous batching supports text-only archs; "
                              "use the static path for mrope/frontend models")
@@ -298,6 +350,12 @@ class ServeEngine:
                 "is a window-sized ring the append step cannot address)")
         self.cfg = cfg
         self.opts = opts or ModelOptions()
+        # NULL_TRACER when off: emission sites guard with `if tr.enabled:`
+        # and build no event dicts on the disabled path
+        self.trace = resolve(tracer)
+        _tr = self.trace if self.trace.enabled else None
+        self._round_modes: list = []
+        self._retracted: set = set()  # rids retracted at least once (tracing)
         self.eng = dataclasses.replace(eng, prefill_chunks=1)
         self.n_arches = self.eng.n_trials
         self.n_chunks = max(1, eng.prefill_chunks)
@@ -307,9 +365,11 @@ class ServeEngine:
             1 if self.eng.batch_replicated
             else self.eng.data_size * self.eng.pod_size)
         self.decode_step = pl.make_serve_step(
-            cfg, self.opts, self.eng, mesh, "decode", with_active=True)
+            cfg, self.opts, self.eng, mesh, "decode", with_active=True,
+            tracer=_tr)
         self.append_step = pl.make_serve_step(
-            cfg, self.opts, self.eng, mesh, "append", with_active=True)
+            cfg, self.opts, self.eng, mesh, "append", with_active=True,
+            tracer=_tr)
         self.fused = bool(fused)
         self.mixed_step = None
         if self.fused:
@@ -319,7 +379,8 @@ class ServeEngine:
                     "(ragged waves pad rows to the wave max and a recurrent "
                     "state would advance through the padded positions)")
             self.mixed_step = pl.make_serve_step(
-                cfg, self.opts, self.eng, mesh, "mixed", with_active=True)
+                cfg, self.opts, self.eng, mesh, "mixed", with_active=True,
+                tracer=_tr)
         # -- gang speculation: pair each target trial row with a drafter row
         self.spec_gamma = int(spec_gamma)
         self.spec_pairs: dict = {}
@@ -354,7 +415,8 @@ class ServeEngine:
                     f"got {spec_pairs}")
             self.spec_pairs = dict(spec_pairs)
             self.verify_step = pl.make_serve_step(
-                cfg, self.opts, self.eng, mesh, "verify", with_active=True)
+                cfg, self.opts, self.eng, mesh, "verify", with_active=True,
+                tracer=_tr)
         self.paged = bool(self.eng.paged)
         if self.opts.use_paged_kernel and not self.paged:
             raise ValueError("use_paged_kernel attends through block tables; "
@@ -392,11 +454,13 @@ class ServeEngine:
             hb = self.eng.host_blocks if host_blocks is None else host_blocks
             self.store = BlockStore(self.allocator, host_blocks=hb,
                                     spill=spill, transfer=self.transfer)
+            self.store.trace = self.trace
         else:
             self.reset_fn = pl.make_slot_reset(cfg, self.eng, mesh)
         self.prefix_cache = None
         if prefix_cache:
             self.prefix_cache = PrefixCache(self.store)
+            self.prefix_cache.trace = self.trace
         self.cache = pl.serve_cache_struct(cfg, self.eng, dry_run=False)
         self.batcher = Batcher(self.eng.n_microbatches, self.mb_global,
                                self.n_chunks, self.eng.max_seq,
@@ -406,7 +470,8 @@ class ServeEngine:
                                overcommit=overcommit, policy=policy,
                                prefix_cache=self.prefix_cache,
                                store=self.store, transfer=self.transfer,
-                               spec_pairs=self.spec_pairs)
+                               spec_pairs=self.spec_pairs,
+                               tracer=self.trace)
         # preemption replaces the stall-retry deadlock guard past 1.0
         self.retractable = self.paged and overcommit > 1.0
         self.tick = 0
@@ -446,6 +511,10 @@ class ServeEngine:
             return False
         self.tick += 1
         self.stats.ticks += 1
+        tr = self.trace
+        if tr.enabled:
+            tr.begin_tick(self.tick)
+            self._round_modes = []
         calls_before = self.stats.calls
         admitted = self.batcher.admit(self.tick)
         if admitted:
@@ -453,6 +522,19 @@ class ServeEngine:
                 self._reset_rows(admitted)
             self.stats.prompt_tokens += sum(
                 s.request.prompt_len for s in admitted if not s.resumed)
+            if tr.enabled:
+                for s in admitted:
+                    rid = s.request.rid
+                    if rid in self._retracted:
+                        via = ("recompute" if s.resume_tokens
+                               else "swap" if s.resumed else "requeue")
+                        tr.req("restore", rid, k=s.k, m=s.m, b=s.b, via=via)
+                        self._retracted.discard(rid)
+                    else:
+                        tr.req("admit", rid, k=s.k, m=s.m, b=s.b,
+                               plen=s.request.prompt_len)
+                    if s.hit_tokens:
+                        tr.req("prefix_hit", rid, tokens=s.hit_tokens)
         occupied = self.batcher.occupied()
         self.stats.peak_live = max(self.stats.peak_live, occupied)
         self.stats.occupancy_samples.append(occupied / self.batcher.n_cells)
@@ -504,6 +586,17 @@ class ServeEngine:
             self.stats.prefix_inserts = self.prefix_cache.inserts
             self.stats.prefix_evictions = self.prefix_cache.evictions
             self.stats.prefix_spills = self.prefix_cache.spills
+        if tr.enabled:
+            rec = {"modes": self._round_modes, "occupied": occupied,
+                   "occupancy": round(occupied / self.batcher.n_cells, 4),
+                   "queues": [len(q) for q in self.batcher.queues]}
+            if self.allocator is not None:
+                rec["pool_blocks"] = self.allocator.used_blocks()
+                rec["host_depth"] = [
+                    self.store.host_used(p)
+                    for p in range(self.store.n_partitions)]
+                rec["inflight"] = self.transfer.take_round_peak()
+            tr.round(**rec)
         return True
 
     # -- internals -----------------------------------------------------------
@@ -635,6 +728,15 @@ class ServeEngine:
             state = ResumeState(generated=gen, pos=victim.pos,
                                 admitted_tick=victim.admitted_tick,
                                 first_token_tick=victim.first_token_tick)
+        tr = self.trace
+        if tr.enabled:
+            swapped = state is not None and state.host_ids is not None
+            if swapped:
+                tr.req("swap_out", req.rid, blocks=len(state.host_ids))
+            via = ("swap" if swapped
+                   else "recompute" if state is not None else "requeue")
+            tr.req("retract", req.rid, via=via, pos=victim.pos)
+            self._retracted.add(req.rid)
         victim.release()
         if peer is not None:
             peer.release()
@@ -725,7 +827,13 @@ class ServeEngine:
         self.stats.calls += 1
         self.stats.prefill_calls += 1
         self.stats.prefill_slot_ticks += len(slots)
+        tr = self.trace
+        if tr.enabled:
+            self._round_modes.append(f"append:{qlen}")
         for s in slots:
+            if tr.enabled:
+                tr.req("prefill_chunk", s.request.rid, k=s.k, m=s.m, b=s.b,
+                       qlen=qlen, pos=s.pos)
             s.chunks.pop(0)
             s.pos += qlen
             if not s.chunks:
@@ -742,6 +850,8 @@ class ServeEngine:
                     s.generated.append(t)
                     s.first_token_tick = self.tick
                     self.stats.tokens_generated += 1
+                    if tr.enabled:
+                        tr.req("first_token", s.request.rid)
                 self._maybe_finish(s)
 
     def _decode_call(self, slots, sample: bool = True) -> int:
@@ -773,6 +883,8 @@ class ServeEngine:
         self.cache, tok, _ = self.decode_step(self.params, self.cache, batch)
         tok = np.asarray(tok)
         self.stats.calls += 1
+        if self.trace.enabled:
+            self._round_modes.append("decode")
         if sample:
             self.stats.decode_busy_samples.append(
                 len(slots) / self.batcher.n_cells)
@@ -856,6 +968,8 @@ class ServeEngine:
         tok = np.asarray(tok)
         self.stats.calls += 1
         self.spec_stats.draft_calls += 1
+        if self.trace.enabled:
+            self._round_modes.append(f"draft:{w}")
         for s in group:
             d = s.peer
             d.pos += w
@@ -911,6 +1025,9 @@ class ServeEngine:
         self.stats.calls += 1
         sp = self.spec_stats
         sp.verify_calls += 1
+        tr = self.trace
+        if tr.enabled:
+            self._round_modes.append("verify")
         self.stats.decode_busy_samples.append(
             len(ready) / self.batcher.n_cells)
         for s in ready:
@@ -926,16 +1043,25 @@ class ServeEngine:
             sp.proposed += len(ds)
             sp.accepted += n_acc
             sp.bonus += 1
+            if tr.enabled:
+                tr.req("spec_propose", s.request.rid, n=len(ds))
+                tr.req("spec_verify", s.request.rid, accepted=n_acc,
+                       committed=len(commit))
             new_pos = s.pos + n_acc + 1
             d = s.peer
+            rolled = 0
             if self.paged and n_acc < len(ds):
                 # rejected positions' blocks go back to the free-list head:
                 # pool state is bit-identical to never having written them
-                sp.rollback_blocks += len(s.table.truncate(new_pos))
+                rolled += len(s.table.truncate(new_pos))
             if d is not None and d.pos > new_pos:
                 if self.paged:
-                    sp.rollback_blocks += len(d.table.truncate(new_pos))
+                    rolled += len(d.table.truncate(new_pos))
                 d.pos = new_pos  # rewind over the rejected draft positions
+            sp.rollback_blocks += rolled
+            if tr.enabled and n_acc < len(ds):
+                tr.req("rollback", s.request.rid, blocks=rolled,
+                       rejected=len(ds) - n_acc)
             s.pos = new_pos
             s.generated.extend(commit)
             self.stats.tokens_generated += len(commit)
@@ -1006,10 +1132,16 @@ class ServeEngine:
         self.stats.calls += 1
         self.stats.mixed_calls += 1
         self.stats.prefill_slot_ticks += len(pre)
-        self.stats.mixed_fill_samples.append(
-            float(qlens.sum()) / (self.batcher.n_cells * qmax))
+        fill = float(qlens.sum()) / (self.batcher.n_cells * qmax)
+        self.stats.mixed_fill_samples.append(fill)
+        tr = self.trace
+        if tr.enabled:
+            self._round_modes.append(f"mixed:{round(fill, 4)}")
         tail = []  # final-chunk completions decode again this round
         for s, q in pre:
+            if tr.enabled:
+                tr.req("prefill_chunk", s.request.rid, k=s.k, m=s.m, b=s.b,
+                       qlen=q, pos=s.pos)
             s.chunks.pop(0)
             s.pos += q
             if not s.chunks:
@@ -1023,6 +1155,8 @@ class ServeEngine:
                     s.generated.append(t)
                     s.first_token_tick = self.tick
                     self.stats.tokens_generated += 1
+                    if tr.enabled:
+                        tr.req("first_token", s.request.rid)
                 self._maybe_finish(s)
                 if s.request is not None:
                     tail.append(s)
@@ -1055,6 +1189,9 @@ class ServeEngine:
             first_token_tick=slot.first_token_tick)
         self.completions.append(comp)
         self.stats.record_completion(comp)
+        if self.trace.enabled:
+            self.trace.req("complete", req.rid, tokens=len(comp.tokens),
+                           ttft=comp.ttft_ticks)
         peer = slot.peer
         slot.release()  # the cell is reusable the same round it finishes
         if peer is not None:  # the drafter mirror cell frees with its target

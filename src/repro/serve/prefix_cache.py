@@ -59,6 +59,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+from repro.obs.tracer import NULL_TRACER
 from repro.serve.paging import BlockAllocator
 from repro.serve.store import BlockStore
 
@@ -157,6 +158,7 @@ class PrefixCache:
         self.spills = 0  # nodes spilled device -> host (still matchable)
         self.host_hits = 0  # host-resident nodes restored by acquire()
         self.host_hit_tokens = 0  # hit tokens served via host restores
+        self.trace = NULL_TRACER  # engine swaps in its tracer when tracing
 
     # -- queries -------------------------------------------------------------
 
@@ -357,6 +359,8 @@ class PrefixCache:
         self.allocator.decref([node.block], partition)
         node.block, node.host = -1, hid
         self.spills += 1
+        if self.trace.enabled:
+            self.trace.emit("prefix_spill", partition=partition)
         return True
 
     def _drop(self, partition: int, node: RadixNode) -> None:
@@ -365,6 +369,8 @@ class PrefixCache:
         node.parent = None
         self.allocator.decref([node.block], partition)
         self.evictions += 1
+        if self.trace.enabled:
+            self.trace.emit("prefix_evict", partition=partition, tier="device")
 
     def drop_host_node(self, partition: int, node: RadixNode) -> None:
         """Destroy a host-resident node whose host block was LRU-evicted
@@ -374,3 +380,5 @@ class PrefixCache:
         node.parent = None
         node.host = None
         self.evictions += 1
+        if self.trace.enabled:
+            self.trace.emit("prefix_evict", partition=partition, tier="host")

@@ -38,6 +38,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro.obs.tracer import NULL_TRACER
 from repro.serve.paging import BlockAllocator
 
 
@@ -79,6 +80,7 @@ class BlockStore:
         self._clock = 0
         self.host_evictions = 0  # host blocks destroyed under host pressure
         self.rollbacks = 0  # device blocks un-allocated by spec rollback
+        self.trace = NULL_TRACER  # engine swaps in its tracer when tracing
 
     # -- queries -------------------------------------------------------------
 
@@ -195,5 +197,7 @@ class BlockStore:
     def _evict_host(self, partition: int, hid: int) -> None:
         hb = self._host[partition].pop(hid)
         self.host_evictions += 1
+        if self.trace.enabled:
+            self.trace.emit("host_evict", partition=partition)
         if hb.owner is not None and self.cache is not None:
             self.cache.drop_host_node(partition, hb.owner)

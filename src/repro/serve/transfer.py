@@ -60,6 +60,7 @@ class TransferEngine:
         self.cow_copies = 0
         self.swap_in_blocks = 0
         self.swap_out_blocks = 0
+        self.round_peak = 0  # max concurrent in-flight dsts since last take
 
     def bind(self, get_cache, set_cache) -> None:
         self._get_cache = get_cache
@@ -75,6 +76,12 @@ class TransferEngine:
     def pending(self) -> int:
         return len(self._copies) + len(self._swap_ins)
 
+    def take_round_peak(self) -> int:
+        """Peak in-flight destination count since the last call — the
+        per-round transfer-pressure sample of the tracer's round record."""
+        peak, self.round_peak = self.round_peak, len(self._in_flight)
+        return peak
+
     # -- enqueue -------------------------------------------------------------
 
     def copy(self, partition: int, src: int, dst: int) -> None:
@@ -82,6 +89,7 @@ class TransferEngine:
         ``dst`` is in-flight until flush; ``src`` stays readable."""
         self._copies.append((partition, src, dst))
         self._in_flight.add((partition, dst))
+        self.round_peak = max(self.round_peak, len(self._in_flight))
         self.cow_copies += 1
 
     def swap_in(self, partition: int, dst: int, payload) -> None:
@@ -90,6 +98,7 @@ class TransferEngine:
         until flush."""
         self._swap_ins.append((partition, dst, payload))
         self._in_flight.add((partition, dst))
+        self.round_peak = max(self.round_peak, len(self._in_flight))
         self.swap_in_blocks += 1
 
     # -- eager device → host -------------------------------------------------
